@@ -1,0 +1,57 @@
+"""Paper section 1 motivation: online rotation overhead inside a transformer
+block must be small (the naive dense-matmul rotation pushes linear-layer
+cost to ~110%). Measures a full block forward with rotation off / factored
+Hadamard / dense-matmul rotation, across d_ff values from the assigned
+archs (incl. non-power-of-2)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hadamard import grouped_hadamard, largest_pow2_divisor
+from repro.kernels.ref import hadamard_matrix
+
+
+def _block(x, w_up, w_down, rotate):
+    h = jax.nn.silu(x @ w_up)
+    h = rotate(h)
+    return h @ w_down
+
+
+def _time(fn, *args, iters=8):
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e3
+
+
+def run(csv: List[str]):
+    rng = np.random.default_rng(0)
+    B, d = 512, 1024
+    for dff in (4096, 6912, 14336):  # pow2, 27*256, 7*2048
+        x = jnp.asarray(rng.standard_normal((B, d)), jnp.float32)
+        w_up = jnp.asarray(rng.standard_normal((d, dff)) * 0.02, jnp.float32)
+        w_down = jnp.asarray(rng.standard_normal((dff, d)) * 0.02, jnp.float32)
+
+        none_fn = jax.jit(lambda a, u, dn: _block(a, u, dn, lambda h: h))
+        had_fn = jax.jit(lambda a, u, dn: _block(a, u, dn,
+                                                 lambda h: grouped_hadamard(h)))
+        p = largest_pow2_divisor(dff)
+        Hd = jnp.asarray(np.kron(np.eye(dff // p, dtype=np.float32),
+                                 hadamard_matrix(p, 1.0 / np.sqrt(p))))
+        dense_fn = jax.jit(lambda a, u, dn: _block(a, u, dn, lambda h: h @ Hd))
+
+        t0 = _time(none_fn, x, w_up, w_down)
+        t1 = _time(had_fn, x, w_up, w_down)
+        t2 = _time(dense_fn, x, w_up, w_down)
+        csv.append(f"e2e_rotation_overhead,dff={dff},block_ms={t0:.2f},"
+                   f"with_fwht_ms={t1:.2f},with_dense_rot_ms={t2:.2f},"
+                   f"fwht_overhead_pct={100*(t1-t0)/t0:.1f},"
+                   f"dense_overhead_pct={100*(t2-t0)/t0:.1f}")
+    return csv

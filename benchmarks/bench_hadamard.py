@@ -1,0 +1,107 @@
+"""Paper Figures 4-7 (+ Appendix B/C): Hadamard-transform runtime/speedup
+across transform sizes x element counts x dtypes x in-place.
+
+Three implementations are timed on this host (CPU):
+  * scalar  -- the original FWHT butterfly (kernels/ref.py), the role the
+               Dao-AILab kernel plays in the paper;
+  * factored -- HadaCore's matmul-structured algorithm on XLA (core/hadamard);
+  * dense   -- explicit H matmul (the naive O(n^2) baseline rotations
+               would otherwise pay).
+
+Wall-clock on CPU compares the *algorithms*; for the TPU *kernel* the
+analytic v5e roofline microseconds (one HBM read + one write at 819 GB/s
+vs. matmul FLOPs at 197 TF) are derived per cell -- that is the number the
+Pallas kernel is engineered against (EXPERIMENTS.md section Perf)."""
+from __future__ import annotations
+
+import math
+import time
+from typing import Callable, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hadamard import hadamard_transform
+from repro.kernels.ref import fwht, hadamard_matrix
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+SIZES = [128, 256, 512, 1024, 2048, 4096, 8192, 16384, 32768]
+ELEM_COUNTS = [2**15, 2**18, 2**21, 2**24]
+
+
+def _time(fn: Callable, *args, iters: int = 5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def tpu_roofline_us(rows: int, n: int, dtype_bytes: int = 2) -> dict:
+    """Analytic v5e time for the hadacore kernel: memory term (1 read + 1
+    write) vs compute term (128-wide matmul passes)."""
+    k = max(1, math.ceil(math.log(n, 128)))
+    flops = 2.0 * rows * n * 128 * k
+    mem = 2.0 * rows * n * dtype_bytes
+    return {"t_mem_us": mem / HBM_BW * 1e6,
+            "t_compute_us": flops / PEAK_FLOPS * 1e6,
+            "bound": "memory" if mem / HBM_BW > flops / PEAK_FLOPS else "compute"}
+
+
+def run(csv: List[str]):
+    dense_cache = {}
+    for n in SIZES:
+        for elems in ELEM_COUNTS:
+            rows = max(1, elems // n)
+            x = jnp.asarray(np.random.default_rng(0).standard_normal((rows, n)),
+                            dtype=jnp.float32)
+            scale = 1.0 / math.sqrt(n)
+
+            t_scalar = _time(jax.jit(lambda a: fwht(a, scale)), x)
+            t_fact = _time(jax.jit(lambda a: hadamard_transform(a)), x)
+            if n <= 4096:
+                if n not in dense_cache:
+                    dense_cache[n] = jnp.asarray(hadamard_matrix(n, scale))
+                H = dense_cache[n]
+                t_dense = _time(jax.jit(lambda a, h: a @ h), x, H)
+            else:
+                t_dense = float("nan")
+            rf = tpu_roofline_us(rows, n)
+            csv.append(
+                f"hadamard_size_sweep,n={n},elems={rows*n},"
+                f"scalar_us={t_scalar:.1f},factored_us={t_fact:.1f},"
+                f"dense_us={t_dense:.1f},speedup_vs_scalar={t_scalar/t_fact:.2f},"
+                f"tpu_roofline_us={max(rf['t_mem_us'], rf['t_compute_us']):.2f},"
+                f"tpu_bound={rf['bound']}")
+
+    # Appendix C: dtype sweep at a representative size
+    for dt, name in ((jnp.float32, "f32"), (jnp.bfloat16, "bf16"),
+                     (jnp.float16, "f16")):
+        x = jnp.asarray(np.random.default_rng(1).standard_normal((4096, 2048)),
+                        dtype=dt)
+        t = _time(jax.jit(lambda a: hadamard_transform(a)), x)
+        rf = tpu_roofline_us(4096, 2048, jnp.dtype(dt).itemsize)
+        csv.append(f"hadamard_dtype,dtype={name},factored_us={t:.1f},"
+                   f"tpu_roofline_us={max(rf['t_mem_us'], rf['t_compute_us']):.2f}")
+
+    # Appendix B: in-place (buffer donation) vs out-of-place
+    x = jnp.asarray(np.random.default_rng(2).standard_normal((8192, 2048)),
+                    dtype=jnp.float32)
+    f_out = jax.jit(lambda a: hadamard_transform(a))
+    f_in = jax.jit(lambda a: hadamard_transform(a), donate_argnums=0)
+    t_out = _time(f_out, x)
+    xs = [jnp.array(x) for _ in range(6)]
+    jax.block_until_ready(f_in(xs.pop()))
+    t0 = time.perf_counter()
+    for _ in range(5):
+        out = f_in(xs.pop())
+    jax.block_until_ready(out)
+    t_in = (time.perf_counter() - t0) / 5 * 1e6
+    csv.append(f"hadamard_inplace,out_of_place_us={t_out:.1f},"
+               f"in_place_us={t_in:.1f},speedup={t_out/max(t_in,1e-9):.2f}")
+    return csv

@@ -1,0 +1,117 @@
+"""Paper section 4.2 (MMLU table) proxy: end-to-end accuracy of FP8 attention
+with and without Hadamard rotation on a small trained Llama-family model.
+
+The paper's table:   FP16 65.38 | FP8-no-rot 64.40 | FP8+DaoKernel 65.45 |
+FP8+HadaCore 65.09 (5-shot MMLU, Llama-3.1-8B).
+
+Container-scale translation: train a ~5M llama3-family model for a few
+hundred steps, then measure (i) eval cross-entropy and (ii) top-1 token
+agreement with the full-precision model, for: fp16 baseline, fp8 attention
+without rotation, fp8 attention + rotation via the factored XLA path (the
+"reference kernel" column) and via hadacore-pallas interpret (the
+"HadaCore" column). The claim being reproduced: rotation recovers the
+quantization loss and the faster kernel is numerically equivalent."""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.quant import QuantConfig
+from repro.data import SyntheticDataset
+from repro.launch.shapes import ShapeSpec, make_batch
+from repro.launch.steps import make_train_step
+from repro.models import init_lm, lm_forward, lm_loss
+from repro.optim import OptConfig, init_opt_state
+
+
+def _train_small(cfg, shape, steps=120, seed=0):
+    params = init_lm(jax.random.PRNGKey(seed), cfg)
+    opt_cfg = OptConfig(lr=1e-3, warmup_steps=10, total_steps=steps)
+    state = init_opt_state(params, opt_cfg)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg))
+    ds = SyntheticDataset(cfg, shape, seed=seed)
+    # structured synthetic language: tokens follow a fixed bigram chain so
+    # there is real signal to learn (pure-noise data says nothing about
+    # quantization error visibility)
+    rng = np.random.default_rng(7)
+    table = rng.integers(0, cfg.vocab_size, cfg.vocab_size, dtype=np.int32)
+
+    def structured(step):
+        b = ds.batch(step)
+        t = b["tokens"]
+        for j in range(1, t.shape[1]):
+            mask = rng.random(t.shape[0]) < 0.8
+            t[mask, j] = table[t[mask, j - 1]]
+        b["tokens"] = t
+        b["labels"] = np.concatenate([t[:, 1:], t[:, :1]], axis=1)
+        return b
+
+    for s in range(steps):
+        batch = structured(s)
+        params, state, metrics = step_fn(params, state, batch)
+    return params, structured
+
+
+def run(csv: List[str]):
+    from repro.core.rotations import fuse_down_proj_rotations
+
+    base = get_config("llama3_8b").scaled_down()
+    shape = ShapeSpec("bench", "train", 64, 8)
+    params, data_fn = _train_small(base, shape)
+    # post-training deployment: the offline half of the rotation is fused
+    # into the trained weights once (exact rewrite)
+    params_rotated = fuse_down_proj_rotations(params)
+
+    eval_batches = [data_fn(10_000 + i) for i in range(4)]
+
+    def evaluate(cfg):
+        p = params_rotated if cfg.quant.rotating else params
+        ces, agrees = [], []
+        for b in eval_batches:
+            logits, _, _ = lm_forward(cfg, p, b)
+            lf = logits.astype(jnp.float32)
+            lse = jax.nn.logsumexp(lf, -1)
+            ll = jnp.take_along_axis(lf, b["labels"][..., None], -1)[..., 0]
+            ces.append(float(jnp.mean(lse - ll)))
+            agrees.append(np.asarray(jnp.argmax(lf, -1)))
+        return float(np.mean(ces)), agrees
+
+    variants = {
+        "fp16_baseline": base,
+        "fp8_attn_no_rotation": base.with_quant(
+            QuantConfig(mode="fp8_e4m3", kv_quant=True, backend="xla")),
+        "fp8_attn_rotation_xla": base.with_quant(
+            QuantConfig(mode="fp8_e4m3", rotate="hadamard", kv_quant=True,
+                        backend="xla")),
+        "fp8_attn_rotation_hadacore": base.with_quant(
+            QuantConfig(mode="fp8_e4m3", rotate="hadamard", kv_quant=True,
+                        backend="pallas")),
+    }
+    results = {}
+    for name, cfg in variants.items():
+        ce, preds = evaluate(cfg)
+        results[name] = (ce, preds)
+
+    base_preds = results["fp16_baseline"][1]
+    for name, (ce, preds) in results.items():
+        agree = float(np.mean([np.mean(p == bp) for p, bp in zip(preds, base_preds)]))
+        csv.append(f"quant_accuracy,variant={name},eval_ce={ce:.4f},"
+                   f"top1_agreement_vs_fp16={agree:.4f}")
+    # the paper's qualitative claims, as recorded assertions:
+    ce16 = results["fp16_baseline"][0]
+    ce_no = results["fp8_attn_no_rotation"][0]
+    ce_rx = results["fp8_attn_rotation_xla"][0]
+    ce_hc = results["fp8_attn_rotation_hadacore"][0]
+    csv.append(
+        "quant_accuracy_claims,"
+        # comparable accuracy: rotated-fp8 CE within 1% of the fp16 CE
+        # (synthetic activations lack real-LLM outlier structure, so the
+        # rotation is accuracy-NEUTRAL here rather than positive -- the
+        # int8 benches show the positive case; see EXPERIMENTS.md)
+        f"rotation_comparable_to_fp16={abs(ce_rx-ce16) < 0.01 * ce16},"
+        f"hadacore_matches_reference={abs(ce_hc-ce_rx) < 5e-3}")
+    return csv

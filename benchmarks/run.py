@@ -1,0 +1,48 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  bench_hadamard        -- Figs 4-7 + Appendix B (in-place) + C (bf16)
+  bench_quant_accuracy  -- section 4.2 MMLU table (container-scale proxy)
+  bench_e2e_overhead    -- section 1 rotation-overhead motivation
+  bench_fused_quant     -- conclusion's future-work fusion (beyond paper)
+
+Prints ``name,key=value,...`` CSV lines; ``--only <name>`` runs a subset.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (  # noqa: PLC0415
+        bench_e2e_overhead,
+        bench_fused_quant,
+        bench_hadamard,
+        bench_quant_accuracy,
+    )
+
+    suites = {
+        "hadamard": bench_hadamard.run,
+        "quant_accuracy": bench_quant_accuracy.run,
+        "e2e_overhead": bench_e2e_overhead.run,
+        "fused_quant": bench_fused_quant.run,
+    }
+    csv = []
+    for name, fn in suites.items():
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        print(f"# running {name} ...", file=sys.stderr)
+        fn(csv)
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    for line in csv:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

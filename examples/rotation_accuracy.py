@@ -1,0 +1,14 @@
+"""Reproduce the paper's section-4.2 accuracy table at container scale:
+FP16 baseline vs FP8 attention without rotation vs FP8 + rotation
+(reference path and hadacore kernel path).
+
+    PYTHONPATH=src python examples/rotation_accuracy.py
+"""
+from benchmarks import bench_quant_accuracy
+
+if __name__ == "__main__":
+    csv = []
+    bench_quant_accuracy.run(csv)
+    print("\n== section 4.2 proxy (lower CE / higher agreement is better) ==")
+    for line in csv:
+        print(line)

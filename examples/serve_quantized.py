@@ -1,0 +1,13 @@
+"""Serve a small model with batched requests and the paper's FP8 +
+Hadamard-rotation KV-cache path (prefill -> decode loop).
+
+    PYTHONPATH=src python examples/serve_quantized.py
+"""
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    serve_main([
+        "--arch", "llama3-8b", "--scale", "0.05",
+        "--batch", "8", "--prompt-len", "128", "--gen", "32",
+        "--quant", "fp8_e4m3", "--rotate", "hadamard",
+    ])

@@ -1,0 +1,48 @@
+"""Architecture registry: one module per assigned architecture, each
+exporting ``CONFIG`` (the exact published configuration) -- select with
+``--arch <id>`` in the launchers."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS: List[str] = [
+    "whisper_base",
+    "mixtral_8x7b",
+    "llama4_maverick_400b_a17b",
+    "llama3_405b",
+    "phi4_mini_3_8b",
+    "starcoder2_15b",
+    "qwen1_5_4b",
+    "zamba2_7b",
+    "rwkv6_7b",
+    "qwen2_vl_7b",
+    # the paper's own end-to-end evaluation model (Llama-3.1-8B, section 4.2)
+    "llama3_8b",
+]
+
+_ALIASES = {
+    "whisper-base": "whisper_base",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "llama3-405b": "llama3_405b",
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "starcoder2-15b": "starcoder2_15b",
+    "qwen1.5-4b": "qwen1_5_4b",
+    "zamba2-7b": "zamba2_7b",
+    "rwkv6-7b": "rwkv6_7b",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "llama3-8b": "llama3_8b",
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    mod_name = _ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,15 @@
+"""llama3-405b [dense]: GQA, 128k vocab. [arXiv:2407.21783; unverified]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-405b",
+    family="dense",
+    d_model=16384,
+    num_heads=128,
+    num_kv_heads=8,
+    d_ff=53248,
+    vocab_size=128256,
+    groups=((("attn",), 126),),
+    rope_theta=500000.0,
+    sub_quadratic=False,
+)

@@ -1,0 +1,22 @@
+"""llama4-maverick-400b-a17b [moe]: 128-expert top-1 MoE interleaved with
+dense layers (every other layer, matching the ~400B total / 17B active
+parameter split), shared expert. Early-fusion multimodality is a frontend
+concern; the assigned backbone is text-shaped.
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=202048,
+    groups=((("attn", "moe"), 24),),   # 48 layers: dense/MoE interleave
+    num_experts=128,
+    experts_per_token=1,
+    moe_shared_expert=True,
+    rope_theta=500000.0,
+    sub_quadratic=False,
+)

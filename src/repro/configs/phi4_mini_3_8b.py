@@ -1,0 +1,15 @@
+"""phi4-mini-3.8b [dense]: RoPE SwiGLU GQA. [arXiv:2412.08905; hf]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi4-mini-3.8b",
+    family="dense",
+    d_model=3072,
+    num_heads=24,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=200064,
+    groups=((("attn",), 32),),
+    tie_embeddings=True,
+    sub_quadratic=False,
+)

@@ -1,0 +1,15 @@
+"""qwen1.5-4b [dense]: QKV bias, MHA (kv=20). [hf:Qwen/Qwen1.5-0.5B; hf]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-4b",
+    family="dense",
+    d_model=2560,
+    num_heads=20,
+    num_kv_heads=20,
+    d_ff=6912,
+    vocab_size=151936,
+    groups=((("attn",), 40),),
+    qkv_bias=True,
+    sub_quadratic=False,
+)

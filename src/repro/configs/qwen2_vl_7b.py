@@ -1,0 +1,21 @@
+"""qwen2-vl-7b [vlm]: M-RoPE, dynamic resolution. The vision tower is a
+stub per the assignment: ``input_specs`` supplies precomputed patch
+embeddings which are prepended to the token embeddings.
+[arXiv:2409.12191; hf]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b",
+    family="vlm",
+    d_model=3584,
+    num_heads=28,
+    num_kv_heads=4,
+    d_ff=18944,
+    vocab_size=152064,
+    groups=((("attn",), 28),),
+    mrope=True,
+    mrope_sections=(16, 24, 24),
+    vlm_patches=1024,
+    rope_theta=1e6,
+    sub_quadratic=False,
+)

@@ -1,0 +1,19 @@
+"""rwkv6-7b "Finch" [ssm]: attention-free, data-dependent decay.
+num_heads is the RWKV head count (d_model / 64). KV-cache rotation point
+does not exist (DESIGN.md Arch-applicability); the channel-mix
+down-projection keeps the paper's online Hadamard. Sub-quadratic:
+eligible for long_500k. [arXiv:2404.05892; hf]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b",
+    family="ssm",
+    d_model=4096,
+    num_heads=64,
+    num_kv_heads=64,
+    d_ff=14336,
+    vocab_size=65536,
+    groups=((("rwkv",), 32),),
+    rwkv_head_dim=64,
+    sub_quadratic=True,
+)

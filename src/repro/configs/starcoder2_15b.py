@@ -1,0 +1,19 @@
+"""starcoder2-15b [dense]: GQA kv=4, RoPE, GELU MLP + LayerNorm, biases.
+[arXiv:2402.19173; hf]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-15b",
+    family="dense",
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=4,
+    d_ff=24576,
+    vocab_size=49152,
+    groups=((("attn",), 40),),
+    act="gelu",
+    norm="layernorm",
+    qkv_bias=True,
+    rope_theta=1e5,
+    sub_quadratic=False,
+)

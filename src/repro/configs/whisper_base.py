@@ -1,0 +1,26 @@
+"""whisper-base [audio]: enc-dec transformer, conv frontend stubbed
+(``input_specs`` supplies precomputed mel-frame embeddings).
+[arXiv:2212.04356; unverified]
+
+Adaptation notes (DESIGN.md): learned positional embeddings replaced by
+sinusoidal so the 32k decode shapes lower (whisper's native decoder ctx is
+448); decode_32k/prefill_32k are therefore out-of-family but well-defined.
+long_500k skipped: full-attention enc-dec."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family="audio",
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    d_ff=2048,
+    vocab_size=51865,
+    groups=((("xattn",), 6),),
+    encoder_groups=((("enc_attn",), 6),),
+    encoder_seq=1500,
+    act="gelu",
+    norm="layernorm",
+    tie_embeddings=True,
+    sub_quadratic=False,
+)

@@ -1,0 +1,23 @@
+"""zamba2-7b [hybrid]: Mamba2 backbone with a shared-style attention block
+every sixth layer (13 superblocks of 5 mamba + 1 attention, 3 mamba tail =
+81 layers). head_dim = 3584/32 = 112 (non-power-of-2: the per-head online
+rotation uses the grouped Hadamard I_7 (x) H_16). Sub-quadratic: eligible
+for long_500k. [arXiv:2411.15242; unverified]"""
+from repro.models.config import ModelConfig
+
+_m5a = ("mamba",) * 5 + ("attn",)
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    d_model=3584,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=14336,
+    vocab_size=32000,
+    groups=((_m5a, 13), (("mamba",), 3)),
+    ssm_state=64,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    sub_quadratic=True,
+)

@@ -1,0 +1,151 @@
+"""Tensorized Kronecker-factored Walsh-Hadamard transform (pure JAX).
+
+This is the XLA-level embodiment of the paper's idea: instead of log2(n)
+scalar butterfly stages, run ceil(log_128(n)) dense matmul passes against a
+128-point base Hadamard -- the TPU MXU's native tile -- with axis
+rearrangement between passes (DESIGN.md section 2).
+
+The Pallas kernel in ``repro.kernels.hadacore`` implements the same pass
+structure with explicit VMEM tiling; this module is the portable path used
+inside models (it shards trivially under pjit because every op is a
+reshape/transpose/dot) and the reference for the kernel's pass math.
+
+Factorization convention: n = 128^k * r with r = 2^m, 1 <= r < 128, and
+
+    H_n = H_128 (x) ... (x) H_128 (x) H_r        (Kronecker, r minor)
+
+so the minor-axis pass touches contiguous lanes and every pass is a
+128-wide MXU matmul (the r-pass uses the paper's diagonal tiling trick:
+I_{128/r} (x) H_r as a 128x128 matrix -- section 3.3 of the paper).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ref import hadamard_matrix, is_pow2
+
+__all__ = [
+    "MXU_TILE",
+    "factorize",
+    "base_matrices",
+    "hadamard_transform",
+    "grouped_hadamard",
+    "largest_pow2_divisor",
+]
+
+MXU_TILE = 128
+
+
+def factorize(n: int) -> Tuple[int, int]:
+    """n = 128^k * r with r = 2^m < 128. Returns (k, r)."""
+    if not is_pow2(n):
+        raise ValueError(f"Hadamard size must be a power of 2, got {n}")
+    k = 0
+    while n % MXU_TILE == 0 and n > MXU_TILE:
+        # peel 128-factors but keep at least one factor (handled below)
+        n //= MXU_TILE
+        k += 1
+    if n == MXU_TILE:
+        return k + 1, 1
+    return k, n
+
+
+def base_matrices(n: int, scale: Optional[float], dtype=jnp.float32) -> List[jnp.ndarray]:
+    """Per-pass base matrices, minor-axis pass FIRST.
+
+    All matrices are 128x128 when n >= 128 (the r-pass is the
+    block-diagonal tiling I_{128/r} (x) H_r). For n < 128 a single n x n
+    matrix is returned. ``scale`` is folded into the first pass matrix --
+    a free normalization, one of the micro-optimizations the scalar
+    algorithm pays a full extra pass (or per-stage multiply) for.
+    """
+    k, r = factorize(n)
+    mats: List[np.ndarray] = []
+    if n < MXU_TILE:
+        mats.append(hadamard_matrix(n))
+    else:
+        if r > 1:
+            tiled = np.kron(np.eye(MXU_TILE // r, dtype=np.float32), hadamard_matrix(r))
+            mats.append(tiled)
+        else:
+            mats.append(hadamard_matrix(MXU_TILE))
+            k -= 1
+        mats.extend(hadamard_matrix(MXU_TILE) for _ in range(k))
+    if scale is not None:
+        mats[0] = mats[0] * np.float32(scale)
+    return [jnp.asarray(m, dtype=dtype) for m in mats]
+
+
+def _apply_passes(x: jnp.ndarray, n: int, mats: List[jnp.ndarray]) -> jnp.ndarray:
+    """Shared pass structure: minor-axis matmul, then one matmul per major
+    128-factor with a transpose-in/transpose-out around each. ``x`` has
+    shape (M, n) and compute dtype (f32). Runs unchanged inside the Pallas
+    kernel body and under plain jit."""
+    m = x.shape[0]
+    if n < MXU_TILE:
+        return x @ mats[0]
+    # minor pass: contiguous 128-lane chunks
+    x = (x.reshape(m * (n // MXU_TILE), MXU_TILE) @ mats[0]).reshape(m, n)
+    # major passes: factor i acts on an axis of size 128 with `post`
+    # trailing elements; pre * 128 * post == n
+    num_major = len(mats) - 1
+    post = n // MXU_TILE
+    pre = 1
+    for i in range(num_major):
+        xv = x.reshape(m * pre, MXU_TILE, post)
+        xv = jnp.swapaxes(xv, -1, -2).reshape(m * pre * post, MXU_TILE)
+        xv = xv @ mats[i + 1]
+        xv = jnp.swapaxes(xv.reshape(m * pre, post, MXU_TILE), -1, -2)
+        x = xv.reshape(m, n)
+        pre *= MXU_TILE
+        post //= MXU_TILE
+    return x
+
+
+@partial(jax.jit, static_argnames=("scale_mode",))
+def _hadamard_transform_jit(x: jnp.ndarray, scale_mode: str) -> jnp.ndarray:
+    n = x.shape[-1]
+    scale = 1.0 / math.sqrt(n) if scale_mode == "ortho" else None
+    mats = base_matrices(n, scale)
+    orig_shape, orig_dtype = x.shape, x.dtype
+    y = _apply_passes(x.astype(jnp.float32).reshape(-1, n), n, mats)
+    return y.reshape(orig_shape).astype(orig_dtype)
+
+
+def hadamard_transform(x: jnp.ndarray, scale: Optional[str] = "ortho") -> jnp.ndarray:
+    """Right Hadamard transform of the last axis, MXU-factored, pure JAX.
+
+    scale: "ortho" (1/sqrt(n), a rotation) or None (+-1 transform).
+    """
+    return _hadamard_transform_jit(x, "ortho" if scale == "ortho" else "none")
+
+
+def largest_pow2_divisor(n: int) -> int:
+    return n & (-n)
+
+
+def grouped_hadamard(x: jnp.ndarray, group: Optional[int] = None,
+                     scale: Optional[str] = "ortho") -> jnp.ndarray:
+    """Hadamard on contiguous groups of the last axis: y = x (I_g (x) H_p).
+
+    This is how rotation-quantization handles non-power-of-2 contraction
+    dims (d_ff = 14336 = 7 * 2048, 53248 = 13 * 4096, ...) and
+    tensor-parallel shards: the transform stays exact, orthogonal and
+    collective-free (DESIGN.md section 3). ``group`` defaults to the
+    largest power-of-2 divisor of the axis size.
+    """
+    n = x.shape[-1]
+    p = group if group is not None else largest_pow2_divisor(n)
+    if n % p != 0 or not is_pow2(p):
+        raise ValueError(f"group {p} must be a power-of-2 divisor of {n}")
+    if p == 1:
+        return x
+    xg = x.reshape(*x.shape[:-1], n // p, p)
+    yg = hadamard_transform(xg, scale=scale)
+    return yg.reshape(x.shape)

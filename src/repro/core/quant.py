@@ -1,0 +1,105 @@
+"""Simulated low-precision quantization (INT8 / FP8) for rotation-quantized
+inference, the paper's end-to-end deployment context (QuaRot / SpinQuant /
+FlashAttention-3 FP8 attention).
+
+Everything here is *fake quant*: values are quantized and immediately
+dequantized so the numerics of INT8/FP8 inference are reproduced exactly
+while all matmuls stay in bf16/f32 (the container has no real int8 MXU
+path; on a real TPU v5e the same scales feed `lax.dot_general` with int8
+inputs). Scales are power-of-two-free, symmetric, per-token or per-channel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["QuantConfig", "quantize", "quant_dot", "kv_quantize"]
+
+_INT8_MAX = 127.0
+_FP8_E4M3_MAX = 448.0
+_FP8_E5M2_MAX = 57344.0
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Quantization + rotation feature switches carried by every model config.
+
+    mode:    'none' | 'int8' | 'fp8_e4m3' | 'fp8_e5m2'
+    rotate:  'none' | 'hadamard'  (online Hadamard rotations at the QuaRot
+             insertion points; offline R1/R2 fusion is applied at init)
+    backend: 'pallas' (hadacore kernel) | 'xla' (factored pure-JAX path)
+    kv_quant: quantize the KV cache (FP8 attention use-case of the paper)
+    """
+    mode: str = "none"
+    rotate: str = "none"
+    backend: str = "xla"
+    kv_quant: bool = False
+    per_token: bool = True
+
+    @property
+    def enabled(self) -> bool:
+        return self.mode != "none"
+
+    @property
+    def rotating(self) -> bool:
+        return self.rotate != "none"
+
+    def kv_cache_dtype(self, model_dtype):
+        """Storage dtype for the KV cache: real fp8 when fp8 KV quant is
+        on (halves cache HBM + wire traffic -- the rotation keeps the
+        direct cast accurate, which is the paper's FP8-attention story)."""
+        import jax.numpy as jnp
+        if self.kv_quant and self.mode == "fp8_e4m3":
+            return jnp.float8_e4m3fn
+        if self.kv_quant and self.mode == "fp8_e5m2":
+            return jnp.float8_e5m2
+        return model_dtype
+
+
+def _absmax(x: jnp.ndarray, axis: Optional[int], keepdims: bool = True) -> jnp.ndarray:
+    m = jnp.max(jnp.abs(x), axis=axis, keepdims=keepdims)
+    return jnp.maximum(m, 1e-8)
+
+
+def quantize(x: jnp.ndarray, mode: str, axis: Optional[int] = -1) -> jnp.ndarray:
+    """Symmetric fake-quantize along ``axis`` (None = per-tensor).
+
+    int8: round-to-nearest to [-127, 127]. fp8: scale to the format's max
+    then cast through the real fp8 dtype (XLA convert), preserving the
+    format's mantissa truncation and dynamic range exactly.
+    """
+    if mode == "none":
+        return x
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    if mode == "int8":
+        s = _absmax(xf, axis) / _INT8_MAX
+        q = jnp.clip(jnp.round(xf / s), -_INT8_MAX, _INT8_MAX)
+        return (q * s).astype(dt)
+    if mode in ("fp8_e4m3", "fp8_e5m2"):
+        fmax = _FP8_E4M3_MAX if mode == "fp8_e4m3" else _FP8_E5M2_MAX
+        fdt = jnp.float8_e4m3fn if mode == "fp8_e4m3" else jnp.float8_e5m2
+        s = _absmax(xf, axis) / fmax
+        q = (xf / s).astype(fdt).astype(jnp.float32)
+        return (q * s).astype(dt)
+    raise ValueError(f"unknown quant mode {mode!r}")
+
+
+def quant_dot(x: jnp.ndarray, w: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
+    """x @ w with fake-quantized operands: per-token (row) scales on the
+    activation, per-out-channel scales on the weight -- the QuaRot setup."""
+    if not cfg.enabled:
+        return x @ w
+    xq = quantize(x, cfg.mode, axis=-1 if cfg.per_token else None)
+    wq = quantize(w, cfg.mode, axis=0)
+    return xq @ wq
+
+
+def kv_quantize(k: jnp.ndarray, v: jnp.ndarray, cfg: QuantConfig):
+    """Quantize K/V on the head dim before the cache write (FP8 attention)."""
+    if not (cfg.enabled and cfg.kv_quant):
+        return k, v
+    return quantize(k, cfg.mode, axis=-1), quantize(v, cfg.mode, axis=-1)

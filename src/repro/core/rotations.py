@@ -1,0 +1,136 @@
+"""QuaRot-style rotation plumbing: offline weight fusion + online Hadamard.
+
+The paper's kernel exists to make the *online* rotations (red blocks in
+its Fig. 1) cheap. This module provides both halves:
+
+offline (free at runtime -- exact algebraic weight rewrites):
+    R1: a global residual-stream rotation Q. Every weight reading from the
+        residual stream is pre-multiplied (W <- Q^T W), every weight
+        writing to it post-multiplied (W <- W Q), embeddings rotated,
+        final LayerNorm folded. We use Q = D H (random-sign diagonal times
+        the orthonormal Walsh-Hadamard matrix), QuaRot's choice.
+    R2: per-head rotation of (W_v, W_o) pairs.
+
+online (runs every token -- this is where hadacore is deployed):
+    * Hadamard on the down_proj input (d_ff contraction dim).
+    * Per-head Hadamard on K (and Q) before the quantized KV-cache write /
+      FP8 attention -- head_dim-sized transforms.
+
+All online rotations route through ``online_hadamard`` which picks the
+Pallas kernel or the factored XLA path, and handles non-power-of-2 dims by
+grouped transforms (exactness preserved; see DESIGN.md section 3).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hadamard import (
+    grouped_hadamard,
+    hadamard_transform,
+    largest_pow2_divisor,
+)
+from repro.core.quant import QuantConfig
+from repro.kernels.ops import hadamard as hadamard_op
+from repro.kernels.ref import hadamard_matrix, is_pow2
+
+__all__ = [
+    "online_hadamard",
+    "rotation_matrix",
+    "rotate_activation_in",
+    "fuse_rotation_rhs",
+    "fuse_rotation_lhs",
+    "fuse_down_proj_rotations",
+]
+
+
+def online_hadamard(x: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
+    """Online orthonormal Hadamard rotation of the last axis.
+
+    Dispatch: power-of-2 sizes <= 32768 go to the hadacore Pallas kernel
+    (cfg.backend == 'pallas') or the MXU-factored XLA path; non-power-of-2
+    sizes use the grouped transform I_g (x) H_p with p the largest
+    power-of-2 divisor.
+    """
+    if not cfg.rotating:
+        return x
+    n = x.shape[-1]
+    if is_pow2(n):
+        return hadamard_op(x, "ortho", cfg.backend)
+    p = largest_pow2_divisor(n)
+    xg = x.reshape(*x.shape[:-1], n // p, p)
+    return hadamard_op(xg, "ortho", cfg.backend).reshape(x.shape)
+
+
+def rotation_matrix(n: int, key: Optional[jax.Array] = None) -> jnp.ndarray:
+    """Orthonormal rotation Q used for offline fusion.
+
+    Q = D H with D a random-sign diagonal and H the orthonormal Hadamard
+    (QuaRot's randomized Hadamard). For non-power-of-2 n: I_g (x) H_p
+    blocked, with the diagonal spanning the full dim. ``key=None`` gives
+    the plain (deterministic) Hadamard."""
+    p = largest_pow2_divisor(n)
+    Hp = hadamard_matrix(p, scale=1.0 / np.sqrt(p))
+    H = np.kron(np.eye(n // p, dtype=np.float32), Hp) if p != n else Hp
+    Q = jnp.asarray(H)
+    if key is not None:
+        d = jax.random.rademacher(key, (n,), dtype=jnp.float32)
+        Q = d[:, None] * Q
+    return Q
+
+
+def rotate_activation_in(x: jnp.ndarray, Q: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """x <- x Q (activations live in rows; residual stream rotation)."""
+    if Q is None:
+        return x
+    return x @ Q
+
+
+def fuse_rotation_rhs(w: jnp.ndarray, Q: jnp.ndarray) -> jnp.ndarray:
+    """W <- W Q for weights *writing* to the rotated stream (out-proj rows
+    stay, output columns rotate). w: (..., d_in, d_out_rotated)."""
+    return w @ Q
+
+
+def fuse_rotation_lhs(w: jnp.ndarray, Q: jnp.ndarray) -> jnp.ndarray:
+    """W <- Q^T W for weights *reading* from the rotated stream.
+    w: (d_in_rotated, ...). Works for stacked (layers, d_in, d_out) too."""
+    return jnp.einsum("ij,...jk->...ik", Q.T, w)
+
+
+def _rotate_rows_grouped(w: jnp.ndarray) -> jnp.ndarray:
+    """W <- (I (x) H) W: grouped Hadamard applied along the row
+    (contraction) axis -- H symmetric, so this is the exact inverse pairing
+    for an online-rotated input. w: (..., d_in, d_out)."""
+    wt = jnp.swapaxes(w.astype(jnp.float32), -1, -2)
+    wt = grouped_hadamard(wt)
+    return jnp.swapaxes(wt, -1, -2).astype(w.dtype)
+
+
+def fuse_down_proj_rotations(params):
+    """Offline half of the paper's online rotation: pre-rotate the rows of
+    every down-projection weight so ``had(h) @ W' == h @ W`` exactly.
+
+    Apply this ONCE when enabling rotation on a model trained WITHOUT it
+    (the post-training-quantization deployment of QuaRot / this paper).
+    Models trained with rotation enabled learn the rotated basis directly
+    and must NOT be fused again.
+
+    Matches the online insertion points: 'w_down' (dense MLP + MoE experts
+    + shared expert) and the RWKV channel-mix 'wv'."""
+    import jax
+
+    def fix(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        if not keys:
+            return leaf
+        if keys[-1] == "w_down":
+            return _rotate_rows_grouped(leaf)
+        if keys[-1] == "wv" and "cmix" in keys:
+            return _rotate_rows_grouped(leaf)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(fix, params)

@@ -1,0 +1,1 @@
+from repro.data.pipeline import SyntheticDataset, MemmapDataset  # noqa: F401

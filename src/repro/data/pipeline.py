@@ -1,0 +1,74 @@
+"""Deterministic, stateless data pipeline.
+
+Fault-tolerance contract: ``batch(step)`` is a pure function of
+(seed, step, shape) -- after a node failure or preemption-restart, resuming
+from checkpoint step k regenerates exactly the batches k, k+1, ... with no
+loader state to restore, and elastically rescaled meshes re-slice the same
+global batch. Two backends:
+
+  * SyntheticDataset -- PRNG token streams (CI, dry-runs, perf work).
+  * MemmapDataset    -- flat .bin token file, deterministic strided reads
+                        (the "real corpus" path; packing = contiguous).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import numpy as np
+
+from repro.launch.shapes import ShapeSpec
+from repro.models.config import ModelConfig
+
+
+class SyntheticDataset:
+    def __init__(self, cfg: ModelConfig, shape: ShapeSpec, seed: int = 0):
+        self.cfg, self.shape, self.seed = cfg, shape, seed
+
+    def batch(self, step: int) -> Dict[str, Any]:
+        cfg, shape = self.cfg, self.shape
+        rng = np.random.default_rng((self.seed, step))
+        B, S = shape.batch, shape.seq
+        out: Dict[str, Any] = {}
+        if cfg.family == "vlm":
+            P = cfg.vlm_patches
+            toks = rng.integers(0, cfg.vocab_size, (B, S - P + 1), dtype=np.int32)
+            out["tokens"], out["labels"] = toks[:, :-1], toks[:, 1:]
+            out["patch_embeds"] = rng.standard_normal(
+                (B, P, cfg.d_model)).astype(np.float32)
+            out["positions"] = np.broadcast_to(
+                np.arange(S, dtype=np.int32), (3, B, S)).copy()
+        else:
+            toks = rng.integers(0, cfg.vocab_size, (B, S + 1), dtype=np.int32)
+            out["tokens"], out["labels"] = toks[:, :-1], toks[:, 1:]
+        if cfg.is_encdec:
+            out["frames"] = rng.standard_normal(
+                (B, cfg.encoder_seq, cfg.d_model)).astype(np.float32)
+        return out
+
+
+class MemmapDataset:
+    """Flat int32 token file; batch(step) takes deterministic strided
+    windows so every step maps to a fixed corpus slice."""
+
+    def __init__(self, cfg: ModelConfig, shape: ShapeSpec, path: str):
+        self.cfg, self.shape = cfg, shape
+        self.tokens = np.memmap(path, dtype=np.int32, mode="r")
+        self.ntok = len(self.tokens)
+
+    def batch(self, step: int) -> Dict[str, Any]:
+        B, S = self.shape.batch, self.shape.seq
+        need = S + 1
+        starts = (np.arange(B, dtype=np.int64) * self.ntok // B
+                  + step * need) % max(self.ntok - need, 1)
+        toks = np.stack([np.asarray(self.tokens[s:s + need]) for s in starts])
+        toks = toks % self.cfg.vocab_size
+        return {"tokens": toks[:, :-1].astype(np.int32),
+                "labels": toks[:, 1:].astype(np.int32)}
+
+
+def write_synthetic_corpus(path: str, ntok: int, vocab: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    arr = rng.integers(0, vocab, ntok, dtype=np.int32)
+    arr.tofile(path)
+    return path

@@ -1,0 +1,145 @@
+"""HadaCore for TPU: MXU-accelerated Walsh-Hadamard transform Pallas kernel.
+
+Paper mapping (DESIGN.md section 2):
+
+  * GPU 16x16 Tensor Core mma base case  ->  128-point base case on the
+    128x128 MXU (``jnp.dot`` with f32 accumulation inside the kernel).
+  * warp-shuffle / shared-memory transposes between passes  ->  in-VMEM
+    reshape/swapaxes (Mosaic lowers these to vreg/sublane moves; no HBM
+    round-trip between passes -- the whole row block stays resident).
+  * threadblock-per-row grid  ->  Pallas grid over row blocks with a
+    ``(block_m, n)`` BlockSpec VMEM tile.
+  * paper section 3.3 non-power-of-16 sizes  ->  the r-pass matrix is the
+    block-diagonal tiling I_{128/r} (x) H_r, so every pass stays a
+    128-wide MXU matmul.
+  * Appendix B in-place rotation  ->  ``input_output_aliases={0: 0}``:
+    the output buffer IS the input buffer, halving HBM footprint (the TPU
+    analogue of halving the L2 working set).
+  * Appendix C BF16  ->  MXU always accumulates f32; we down-convert at
+    the very end (conversion cost amortized over all passes).
+
+Like the paper's kernel (and the Dao-AILab kernel it beats), a single
+kernel invocation supports transform sizes up to 2^15 = 32768; the wrapper
+falls back to the pure-JAX factored path above that.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.hadamard import MXU_TILE, _apply_passes, base_matrices
+
+__all__ = ["hadacore", "MAX_KERNEL_SIZE", "default_block_m"]
+
+# Same per-invocation cap as the paper's kernel (2^15). Above this the
+# (block_m, n) row tile would still fit VMEM only for tiny block_m.
+MAX_KERNEL_SIZE = 32768
+
+# VMEM budget we tile for (v5e has 16 MiB more or less reserved for Pallas).
+_VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+
+def default_block_m(n: int, m: int, dtype=jnp.float32) -> int:
+    """Rows per grid step. Plays the role of the paper's empirically chosen
+    warps_per_block x num_chunks: large enough to keep the MXU busy
+    (>=128-row matmuls when possible), small enough that x + out + f32
+    scratch fit the VMEM budget."""
+    bytes_per_row = n * (jnp.dtype(dtype).itemsize + 4)  # io tile + f32 compute copy
+    bm = max(8, _VMEM_BUDGET_BYTES // max(bytes_per_row, 1))
+    bm = min(bm, 256, m)
+    # round down to a multiple of 8 (f32 sublane); keep at least 8
+    return max(8, (bm // 8) * 8)
+
+
+def _hadacore_kernel(x_ref, mats_ref, o_ref, *, n: int):
+    """One grid step: transform a (block_m, n) row block entirely in VMEM."""
+    x = x_ref[...].astype(jnp.float32)
+    bm = x.shape[0]
+    mats = [mats_ref[p] for p in range(mats_ref.shape[0])]
+    y = _apply_passes(x.reshape(bm, n), n, mats)
+    o_ref[...] = y.reshape(x_ref.shape).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale_mode", "block_m", "interpret", "in_place"),
+)
+def _hadacore_call(
+    x: jnp.ndarray,
+    scale_mode: str,
+    block_m: Optional[int],
+    interpret: bool,
+    in_place: bool,
+) -> jnp.ndarray:
+    import math
+
+    n = x.shape[-1]
+    scale = 1.0 / math.sqrt(n) if scale_mode == "ortho" else None
+    mats = jnp.stack(base_matrices(n, scale))  # (P, b, b), b = min(n, 128)
+    b = mats.shape[-1]
+
+    orig_shape = x.shape
+    m = 1
+    for d in x.shape[:-1]:
+        m *= d
+    x2 = x.reshape(m, n)
+
+    bm = block_m or default_block_m(n, m, x.dtype)
+    pad = (-m) % bm
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    mp = x2.shape[0]
+
+    grid = (mp // bm,)
+    kernel = functools.partial(_hadacore_kernel, n=n)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((mats.shape[0], b, b), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, n), x.dtype),
+        input_output_aliases={0: 0} if in_place else {},
+        interpret=interpret,
+    )(x2, mats.astype(jnp.float32))
+
+    if pad:
+        out = out[:m]
+    return out.reshape(orig_shape)
+
+
+def hadacore(
+    x: jnp.ndarray,
+    scale: Optional[str] = "ortho",
+    *,
+    block_m: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    in_place: bool = False,
+) -> jnp.ndarray:
+    """HadaCore Walsh-Hadamard transform of the last axis (Pallas TPU kernel).
+
+    Args:
+      x: (..., n) with n a power of 2, n <= 32768 for the kernel path.
+      scale: "ortho" (1/sqrt(n) rotation) or None (+-1 transform).
+      block_m: rows per grid step (None = VMEM-budget heuristic).
+      interpret: run the kernel body in interpret mode (None = auto: True
+        off-TPU so CPU CI validates the same kernel code path).
+      in_place: alias the output onto the input buffer (Appendix B).
+    """
+    n = x.shape[-1]
+    if n > MAX_KERNEL_SIZE:
+        raise ValueError(
+            f"hadacore kernel supports n <= {MAX_KERNEL_SIZE} (paper cap); "
+            f"got {n}. Use repro.core.hadamard.hadamard_transform."
+        )
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _hadacore_call(
+        x, "ortho" if scale == "ortho" else "none", block_m, interpret, in_place
+    )

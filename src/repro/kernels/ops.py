@@ -1,0 +1,51 @@
+"""Public jit'd Hadamard-transform op with autodiff and backend dispatch.
+
+``hadamard`` is the single entry point models use. It dispatches:
+
+  * n <= 32768 (paper's kernel cap)  ->  Pallas hadacore kernel
+    (interpret mode off-TPU, compiled Mosaic on TPU)
+  * larger n, or ``backend="xla"``   ->  pure-JAX MXU-factored path
+
+and carries a ``custom_vjp``: the Walsh-Hadamard matrix is symmetric, so
+the pullback of ``y = x @ (s H)`` is ``g @ (s H)`` -- the transform is its
+own adjoint, which keeps rotation layers cheap in the backward pass (one
+more hadacore call instead of a transposed matmul).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hadamard import hadamard_transform
+from repro.kernels.hadacore import MAX_KERNEL_SIZE, hadacore
+
+__all__ = ["hadamard"]
+
+
+def _fwd_impl(x: jnp.ndarray, scale: Optional[str], backend: str) -> jnp.ndarray:
+    n = x.shape[-1]
+    if backend == "pallas" and n <= MAX_KERNEL_SIZE:
+        return hadacore(x, scale=scale)
+    return hadamard_transform(x, scale=scale)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def hadamard(x: jnp.ndarray, scale: Optional[str] = "ortho",
+             backend: str = "pallas") -> jnp.ndarray:
+    """Differentiable right Hadamard transform of the last axis."""
+    return _fwd_impl(x, scale, backend)
+
+
+def _hadamard_fwd(x, scale, backend):
+    return _fwd_impl(x, scale, backend), None
+
+
+def _hadamard_bwd(scale, backend, _res, g):
+    # H^T = H and the scale is scalar: the op is self-adjoint.
+    return (_fwd_impl(g, scale, backend),)
+
+
+hadamard.defvjp(_hadamard_fwd, _hadamard_bwd)

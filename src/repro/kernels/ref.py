@@ -1,0 +1,72 @@
+"""Pure-jnp oracle for the Fast Walsh-Hadamard Transform.
+
+This mirrors the paper's Listing 1 (the classic in-place butterfly FWHT),
+vectorized over leading axes. It is the ground-truth every kernel is
+validated against, and it is also the "scalar algorithm" baseline in the
+benchmark harness (the role the Dao-AILab CUDA kernel plays in the paper).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["fwht", "hadamard_matrix", "is_pow2"]
+
+
+def is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+def fwht(x: jnp.ndarray, scale: Optional[float] = None) -> jnp.ndarray:
+    """Right Walsh-Hadamard transform of the last axis: ``y = x @ H_n * scale``.
+
+    ``scale=None`` leaves the +-1 (unnormalized) transform;
+    ``scale=1/sqrt(n)`` gives the orthonormal transform (the paper
+    normalizes by 1/sqrt(2) per stage, which is the same thing).
+
+    The stage loop is a Python loop over log2(n) butterfly stages -- each
+    stage pairs elements at stride ``h`` exactly like the paper's Listing 1.
+    """
+    n = x.shape[-1]
+    if not is_pow2(n):
+        raise ValueError(f"FWHT size must be a power of 2, got {n}")
+    orig_shape = x.shape
+    orig_dtype = x.dtype
+    x = x.astype(jnp.float32).reshape(-1, n)
+    h = 1
+    while h < n:
+        # (rows, n) -> (rows, n/(2h), 2, h): axis -2 indexes the (j, j+h) pair
+        x = x.reshape(-1, n // (2 * h), 2, h)
+        a = x[:, :, 0, :]
+        b = x[:, :, 1, :]
+        x = jnp.stack([a + b, a - b], axis=2)
+        h *= 2
+    x = x.reshape(orig_shape)
+    if scale is not None:
+        x = x * scale
+    return x.astype(orig_dtype)
+
+
+def hadamard_matrix(n: int, scale: Optional[float] = None) -> np.ndarray:
+    """Explicit Sylvester-construction Walsh-Hadamard matrix (numpy, f32).
+
+    Used by tests to check kernels against an explicit matmul, exactly like
+    the paper's "basic unit tests that check the output of HadaCore against
+    the output of an explicit Hadamard matrix multiplication".
+    """
+    if not is_pow2(n):
+        raise ValueError(f"Hadamard size must be a power of 2, got {n}")
+    H = np.array([[1.0]], dtype=np.float32)
+    while H.shape[0] < n:
+        H = np.block([[H, H], [H, -H]])
+    if scale is not None:
+        H = H * scale
+    return H.astype(np.float32)
+
+
+def ortho_scale(n: int) -> float:
+    """The orthonormal scale 1/sqrt(n)."""
+    return 1.0 / math.sqrt(n)

@@ -1,0 +1,288 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes and extract roofline terms.
+
+The two lines above MUST run before any jax import: jax locks the device
+count at first init, and the dry-run needs 512 placeholder host devices to
+build the 2x16x16 production mesh. (Smoke tests and benches see 1 device;
+this env var is set here and ONLY here.)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b \
+      --shape train_4k --mesh multi
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out artifacts/dryrun
+Artifacts: one JSON per cell with memory_analysis, cost_analysis, the
+while-corrected HLO analysis (flops / HBM bytes / collective wire bytes),
+and the derived three-term roofline (TPU v5e constants).
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core.quant import QuantConfig
+from repro.launch import shapes as shp
+from repro.launch.flops import count_params, model_flops
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (
+    batch_shardings,
+    cache_shardings,
+    jit_prefill_step,
+    jit_serve_step,
+    jit_train_step,
+    param_shapes,
+    param_shardings,
+    opt_state_shapes,
+    opt_state_shardings,
+)
+from repro.optim import OptConfig
+
+# ------------------------------------------------- TPU v5e roofline model
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link (per-chip injection, 1 link)
+
+
+def roofline_terms(per_device: dict, n_chips: int) -> dict:
+    """Three roofline terms in seconds (per-step), from per-device costs."""
+    t_compute = per_device["flops_per_device"] / PEAK_FLOPS
+    t_memory = per_device["hbm_bytes_per_device"] / HBM_BW
+    t_coll = per_device["collective_total_bytes_per_device"] / ICI_BW
+    dom = max((t_compute, "compute"), (t_memory, "memory"), (t_coll, "collective"))
+    return {
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        "collective_s": t_coll,
+        "dominant": dom[1],
+        "bound_s": dom[0],
+    }
+
+
+def _cell_step(cfg, shape, mesh, opt_cfg, rules, microbatches=1):
+    """Return (jitted fn, example ShapeDtypeStruct args) for the cell."""
+    if shape.kind == "train":
+        step, _ = jit_train_step(cfg, opt_cfg, shape, mesh, rules_overrides=rules,
+                                 microbatches=microbatches)
+        args = (param_shapes(cfg), opt_state_shapes(cfg, opt_cfg),
+                shp.batch_specs(cfg, shape))
+        return step, args
+    if shape.kind == "prefill":
+        step, _ = jit_prefill_step(cfg, shape, mesh, rules_overrides=rules)
+        args = (param_shapes(cfg), shp.batch_specs(cfg, shape))
+        return step, args
+    # decode
+    step, _ = jit_serve_step(cfg, shape.batch, shape.seq, mesh, rules_overrides=rules)
+    args = (param_shapes(cfg), shp.cache_specs(cfg, shape.batch, shape.seq),
+            jax.ShapeDtypeStruct((shape.batch, 1), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32))
+    return step, args
+
+
+def decode_rules(cfg, shape):
+    """Per-cell sharding-rule overrides.
+
+    decode: the KV cache shards its sequence dim over 'model'
+    (flash-decoding style); batch=1 long-context also spans 'data'.
+
+    Serving weight layout (Perf iteration C): FSDP-sharded weights must be
+    all-gathered EVERY decode step (63 GB/step/device for llama4 -- the
+    dominant collective in the baseline table). So at serve time:
+      * MoE archs shard experts over 'data' (EP) x expert-ffn over 'model'
+        (TP) -- dispatch all-to-alls move activations (KBs at decode), not
+        weights;
+      * dense archs replicate the 'fsdp' dims IF the model-sharded weights
+        fit comfortably (<6 GB/device); giant dense models (405B) keep
+        FSDP storage and pay the gather -- or use weight-only INT8
+        (--quant int8) to halve it.
+    """
+    if shape.kind != "decode":
+        return None
+    rules = {"kvseq": "model", "kv": None}
+    if shape.batch < 32:
+        rules["kvseq"] = ("data", "model")
+        rules["heads"] = "model"
+    from repro.launch.flops import count_params
+    if cfg.num_experts:
+        rules.update({"experts": "data", "dff": "model", "fsdp": None,
+                      "moebatch": None})
+    else:
+        per_dev_gb = count_params(cfg)["total"] * 2 / 16 / 1e9  # TP-sharded bf16
+        if per_dev_gb < 6.0:
+            rules["fsdp"] = None
+    return rules
+
+
+FSDP_ONLY_RULES = {
+    "heads": None, "kv": None, "dff": None, "experts": None,
+    "vocab": ("pod", "data", "model"),
+    "fsdp": ("pod", "data", "model"),
+}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, quant: QuantConfig,
+             opt_cfg: OptConfig, verbose: bool = True, remat: str = None,
+             seqpar: bool = False, rules_preset: str = None,
+             rwkv_chunk: int = None, microbatches: int = 1,
+             weight_quant: str = "none") -> dict:
+    cfg = get_config(arch).with_quant(quant)
+    if remat:
+        cfg = dataclasses.replace(cfg, remat=remat)
+    if rwkv_chunk:
+        cfg = dataclasses.replace(cfg, rwkv_chunk=rwkv_chunk)
+    if weight_quant != "none":
+        cfg = dataclasses.replace(cfg, weight_quant=weight_quant)
+    shape = shp.SHAPES[shape_name]
+    skip = shp.shape_applicable(cfg, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "quant": dataclasses.asdict(quant)}
+    if skip:
+        result["status"] = "skipped"
+        result["reason"] = skip
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    rules = decode_rules(cfg, shape)
+    if seqpar:
+        rules = dict(rules or {}, seqpar="model")
+        result["seqpar"] = True
+    if rules_preset == "fsdp_only":
+        rules = dict(rules or {}, **FSDP_ONLY_RULES)
+        result["rules_preset"] = rules_preset
+    if microbatches > 1:
+        result["microbatches"] = microbatches
+    t0 = time.time()
+    try:
+        step, args = _cell_step(cfg, shape, mesh, opt_cfg, rules, microbatches)
+        lowered = step.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = analyze_hlo(compiled.as_text())
+        params = count_params(cfg)
+        mf = model_flops(cfg, shape)
+        rt = roofline_terms(hlo, n_chips)
+        hlo_global_flops = hlo["flops_per_device"] * n_chips
+        result.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "n_chips": n_chips,
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "per_device_total_gb": round(
+                    (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                     - mem.alias_size_in_bytes) / 1e9, 3),
+            },
+            "xla_cost_analysis": {k: ca.get(k) for k in
+                                  ("flops", "bytes accessed") if k in ca},
+            "hlo_analysis": hlo,
+            "params": params,
+            "model_flops": mf,
+            "useful_flops_ratio": mf / max(hlo_global_flops, 1.0),
+            "roofline": rt,
+        })
+    except Exception as e:  # noqa: BLE001 -- a failing cell is a recorded bug
+        result["status"] = "error"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-2000:]
+    if verbose:
+        _print_cell(result)
+    return result
+
+
+def _print_cell(r: dict):
+    hdr = f"[{r['mesh']}] {r['arch']} x {r['shape']}"
+    if r["status"] == "skipped":
+        print(f"{hdr}: SKIP ({r['reason']})")
+    elif r["status"] == "error":
+        print(f"{hdr}: ERROR {r['error']}")
+    else:
+        rt = r["roofline"]
+        print(f"{hdr}: ok lower={r['lower_s']}s compile={r['compile_s']}s "
+              f"mem/dev={r['memory']['per_device_total_gb']}GB "
+              f"compute={rt['compute_s']*1e3:.2f}ms memory={rt['memory_s']*1e3:.2f}ms "
+              f"coll={rt['collective_s']*1e3:.2f}ms dom={rt['dominant']} "
+              f"useful={r['useful_flops_ratio']:.2f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(shp.SHAPES) + [None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true", help="all assigned (arch, shape) cells")
+    ap.add_argument("--quant", default="none",
+                    choices=["none", "int8", "fp8_e4m3", "fp8_e5m2"])
+    ap.add_argument("--rotate", default="none", choices=["none", "hadamard"])
+    ap.add_argument("--opt-state", default="f32", choices=["f32", "int8"])
+    ap.add_argument("--remat", default=None, choices=[None, "none", "dots", "full"])
+    ap.add_argument("--seqpar", action="store_true",
+                    help="sequence-shard the residual stream over the TP axis")
+    ap.add_argument("--rules-preset", default=None, choices=[None, "fsdp_only"],
+                    help="fsdp_only: no tensor parallelism -- params sharded "
+                         "over every mesh axis (ZeRO-3), activations batch-"
+                         "sharded; trades per-layer weight all-gathers for "
+                         "the elimination of TP activation all-reduces")
+    ap.add_argument("--rwkv-chunk", type=int, default=None)
+    ap.add_argument("--microbatch", type=int, default=1,
+                    help="gradient-accumulation microbatches per step")
+    ap.add_argument("--weight-quant", default="none", choices=["none", "int8"],
+                    help="weight-only int8 storage (serving)")
+    ap.add_argument("--tag", default="", help="artifact filename suffix")
+    ap.add_argument("--out", default=None, help="artifact directory (JSON per cell)")
+    args = ap.parse_args()
+
+    quant = QuantConfig(mode=args.quant, rotate=args.rotate,
+                        kv_quant=args.quant != "none", backend="xla")
+    opt_cfg = OptConfig(state_dtype=args.opt_state)
+
+    archs = ARCH_IDS[:10] if args.all else [args.arch]
+    shapes = list(shp.SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results = []
+    for arch in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                r = run_cell(arch, shape_name, multi, quant, opt_cfg,
+                             remat=args.remat, seqpar=args.seqpar,
+                             rules_preset=args.rules_preset,
+                             rwkv_chunk=args.rwkv_chunk,
+                             microbatches=args.microbatch,
+                             weight_quant=args.weight_quant)
+                results.append(r)
+                if args.out:
+                    os.makedirs(args.out, exist_ok=True)
+                    tag = f"{arch}__{shape_name}__{r['mesh']}"
+                    if args.quant != "none" or args.rotate != "none":
+                        tag += f"__{args.quant}_{args.rotate}"
+                    if args.tag:
+                        tag += f"__{args.tag}"
+                    with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                        json.dump(r, f, indent=1)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\ndry-run cells: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Analytic MODEL_FLOPS per (architecture, shape) -- the 'useful work'
+denominator for the roofline table's MODEL_FLOPS / HLO_FLOPS ratio.
+
+Conventions (PaLM-style MFU accounting):
+  * matmul params count 2 FLOPs/param/token forward; train = 3x forward
+    (activation grads + weight grads).
+  * MoE counts only routed-active experts (6 * N_active * D).
+  * attention scores/context add 4*B*S^2*H*hd per full-attention layer
+    forward (full square -- XLA materializes the causal square too);
+    sliding-window uses S*W.
+  * decode counts one token against the full KV cache.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+
+from repro.launch import shapes as shp
+from repro.models.config import ModelConfig
+
+
+def _param_sizes(cfg: ModelConfig) -> Dict[str, float]:
+    from repro.launch.steps import param_shapes
+    tree = param_shapes(cfg)
+    flat = jax.tree.flatten_with_path(tree)[0]
+    total = emb = experts = 0.0
+    for path, leaf in flat:
+        sz = 1.0
+        for d in leaf.shape:
+            sz *= d
+        total += sz
+        keys = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        if "experts" in keys:
+            experts += sz
+        if keys and keys[-1] == "emb":
+            emb += sz
+    return {"total": total, "emb": emb, "experts": experts}
+
+
+def count_params(cfg: ModelConfig) -> Dict[str, float]:
+    s = _param_sizes(cfg)
+    E, K = max(cfg.num_experts, 1), max(cfg.experts_per_token, 1)
+    active = s["total"] - s["experts"] * (1.0 - K / E)
+    return {"total": s["total"], "active": active, "emb": s["emb"],
+            "experts": s["experts"]}
+
+
+def _attn_layers(cfg: ModelConfig) -> int:
+    n = 0
+    for pattern, reps in tuple(cfg.groups) + tuple(cfg.encoder_groups):
+        n += sum(1 for k in pattern if k in ("attn", "moe", "xattn", "enc_attn")) * reps
+    return n
+
+
+def _matmul_params(cfg: ModelConfig, active: bool = True) -> float:
+    c = count_params(cfg)
+    n = c["active"] if active else c["total"]
+    n -= c["emb"]                     # token gather is not a matmul
+    if cfg.tie_embeddings:
+        n += c["emb"]                 # ...but the tied unembed matmul is
+    return n
+
+
+def model_flops(cfg: ModelConfig, shape: shp.ShapeSpec) -> float:
+    B, S = shape.batch, shape.seq
+    H, hd = cfg.num_heads, cfg.head_dim
+    La = _attn_layers(cfg)
+    n_mm = _matmul_params(cfg, active=True)
+
+    if shape.kind in ("train", "prefill"):
+        tokens = B * S
+        fwd = 2.0 * n_mm * tokens
+        eff_kv = min(S, cfg.sliding_window) if cfg.sliding_window else S
+        fwd += 4.0 * B * S * eff_kv * H * hd * La
+        if cfg.is_encdec:
+            fwd += 4.0 * B * S * cfg.encoder_seq * H * hd * sum(
+                1 for p, r in cfg.groups for k in p if k == "xattn") * 1.0
+        return fwd * (3.0 if shape.kind == "train" else 1.0)
+
+    # decode: one token, full cache
+    eff_kv = min(S, cfg.sliding_window) if cfg.sliding_window else S
+    fwd = 2.0 * n_mm * B
+    fwd += 4.0 * B * eff_kv * H * hd * La
+    return fwd

@@ -1,0 +1,342 @@
+"""While-aware post-optimization HLO analysis for roofline terms.
+
+``compiled.cost_analysis()`` on the host platform reports the partitioned
+module's FLOPs with every while (scan) body counted ONCE and gives no
+collective breakdown. This module parses ``compiled.as_text()`` into
+computations, resolves operand shapes, multiplies while bodies by their
+trip counts (recovered from the loop-condition constants), and produces:
+
+  * flops          -- dot/conv FLOPs per device (trip-corrected)
+  * hbm_bytes      -- sum of operand+result bytes of top-level ops
+                      (post-fusion: each op reads/writes HBM once -- the
+                      standard HLO traffic model), trip-corrected
+  * collectives    -- per-kind op counts and wire bytes per device using
+                      ring cost models:
+                        all-reduce       2 * size * (n-1)/n
+                        all-gather       out_size * (n-1)/n
+                        reduce-scatter   in_size * (n-1)/n
+                        all-to-all       size * (n-1)/n
+                        collective-permute  size
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "s4": 0.5, "u4": 0.5,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    """'f32[128,512]' or tuple '(s32[], bf16[1,2])' -> total bytes."""
+    total = 0.0
+    for m in re.finditer(r"([a-z]+[0-9]*[a-z0-9]*)\[([\d,]*)\]", shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(shape_str: str) -> Tuple[List[int], str]:
+    m = re.search(r"([a-z]+[0-9]*[a-z0-9]*)\[([\d,]*)\]", shape_str)
+    if not m:
+        return [], "f32"
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return dims, m.group(1)
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape_str: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: Dict[str, str]           # param name -> shape str
+    instrs: List[Instr]
+    by_name: Dict[str, Instr]
+
+
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->\s*(.+)\s*\{\s*$")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*((?:\([^)]*\))|(?:[a-z][a-z0-9]*\[[\d,]*\]\S*))\s+"
+    r"([\w\-]+)\((.*)$")
+
+
+def _split_operands(argstr: str) -> List[str]:
+    """Names of %operands up to the closing paren of the call."""
+    depth = 0
+    out = []
+    cur = []
+    for ch in argstr:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                break
+            depth -= 1
+        cur.append(ch)
+    body = "".join(cur)
+    return re.findall(r"%([\w\.\-]+)", body)
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry_name = None
+    for line in text.splitlines():
+        m = _COMP_RE.match(line)
+        if m and ("->" in line):
+            params = {}
+            for pm in re.finditer(r"([\w\.\-]+):\s*((?:\([^)]*\))|(?:[a-z][a-z0-9]*\[[\d,]*\]))",
+                                  m.group(3)):
+                params[pm.group(1)] = pm.group(2)
+            cur = Computation(m.group(2), params, [], {})
+            comps[cur.name] = cur
+            if m.group(1):
+                entry_name = cur.name
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        im = _INSTR_RE.match(line)
+        if im:
+            ins = Instr(im.group(1), im.group(2), im.group(3),
+                        _split_operands(im.group(4)), im.group(4), line)
+            cur.instrs.append(ins)
+            cur.by_name[ins.name] = ins
+    if entry_name:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _operand_shape(comp: Computation, name: str) -> str:
+    if name in comp.by_name:
+        return comp.by_name[name].shape_str
+    if name in comp.params:
+        return comp.params[name]
+    return ""
+
+
+def _dot_flops(comp: Computation, ins: Instr) -> float:
+    out_dims, _ = _shape_dims(ins.shape_str)
+    lhs_shape = _operand_shape(comp, ins.operands[0]) if ins.operands else ""
+    lhs_dims, _ = _shape_dims(lhs_shape)
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+    contract = 1
+    if cm and cm.group(1):
+        for d in cm.group(1).split(","):
+            contract *= lhs_dims[int(d)] if int(d) < len(lhs_dims) else 1
+    n_out = 1
+    for d in out_dims:
+        n_out *= d
+    return 2.0 * n_out * contract
+
+
+def _trip_count_from_config(ins: Instr) -> Optional[int]:
+    """XLA records known trip counts: backend_config={"known_trip_count":
+    {"n":"6"}, ...} on the while instruction itself."""
+    m = re.search(r'known_trip_count[^0-9]*(\d+)', ins.line)
+    return int(m.group(1)) if m else None
+
+
+def _trip_count(comps, cond_name: str) -> int:
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    best = 1
+    for ins in cond.instrs:
+        m = re.search(r"constant\((\d+)\)", ins.line)
+        if m:
+            best = max(best, int(m.group(1)))
+        # constants may live in a fused compare computation
+        cm = re.search(r"calls=%([\w\.\-]+)", ins.attrs)
+        if cm and cm.group(1) in comps:
+            for ins2 in comps[cm.group(1)].instrs:
+                m2 = re.search(r"constant\((\d+)\)", ins2.line)
+                if m2:
+                    best = max(best, int(m2.group(1)))
+    return best
+
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+                   "bitcast", "after-all", "partition-id", "replica-id",
+                   "while", "conditional", "call"}
+
+
+def _fusion_window_bytes(comp: Computation):
+    """For each fusion parameter consumed ONLY by dynamic-slice /
+    dynamic-update-slice ops inside the fused computation, the effective
+    HBM bytes are the accessed window(s), not the whole buffer."""
+    out = {}
+    param_names = list(comp.params.keys())
+    for idx, pname in enumerate(param_names):
+        uses = [i for i in comp.instrs if pname in i.operands]
+        if not uses:
+            continue
+        win = 0.0
+        ok = True
+        for u in uses:
+            if u.opcode == "dynamic-slice" and u.operands and u.operands[0] == pname:
+                win += _shape_bytes(u.shape_str)
+            elif (u.opcode == "dynamic-update-slice" and u.operands
+                  and u.operands[0] == pname):
+                if len(u.operands) > 1:
+                    win += _shape_bytes(_operand_shape(comp, u.operands[1]))
+            else:
+                ok = False
+                break
+        if ok:
+            out[idx] = win
+    return out
+
+
+def _ring_factor(kind: str, nrep: int) -> float:
+    return (nrep - 1) / max(nrep, 1)
+
+
+def _replica_group_size(attrs: str) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    coll_count: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: defaultdict(int))
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] += v * mult
+        for k, v in other.coll_count.items():
+            self.coll_count[k] += int(v * mult)
+
+
+def _comp_cost(comps: Dict[str, Computation], name: str,
+               memo: Dict[str, Cost]) -> Cost:
+    if name in memo:
+        return memo[name]
+    comp = comps[name]
+    cost = Cost()
+    memo[name] = cost  # placeholder against cycles
+    for ins in comp.instrs:
+        op = ins.opcode
+        if op == "while":
+            bm = re.search(r"body=%([\w\.\-]+)", ins.attrs)
+            cm = re.search(r"condition=%([\w\.\-]+)", ins.attrs)
+            trips = _trip_count_from_config(ins)
+            if trips is None:
+                trips = _trip_count(comps, cm.group(1)) if cm else 1
+            if bm and bm.group(1) in comps:
+                cost.add(_comp_cost(comps, bm.group(1), memo), trips)
+            continue
+        if op in ("call", "conditional"):
+            for target in re.findall(r"(?:to_apply|calls|branch_computations)=.*?%([\w\.\-]+)", ins.attrs):
+                if target in comps:
+                    cost.add(_comp_cost(comps, target, memo))
+            continue
+        if op == "fusion":
+            cm = re.search(r"calls=%([\w\.\-]+)", ins.attrs)
+            inner_comp = comps.get(cm.group(1)) if cm else None
+            if inner_comp is not None:
+                inner = _comp_cost(comps, inner_comp.name, memo)
+                cost.flops += inner.flops        # fused dots still compute
+            # bytes: fusion reads operands once, writes result once --
+            # except operands the fused computation only dynamic-slices,
+            # which read their window, not the full buffer
+            b = _shape_bytes(ins.shape_str)
+            window = _fusion_window_bytes(inner_comp) if inner_comp else {}
+            for oi, o in enumerate(ins.operands):
+                b += window.get(oi, _shape_bytes(_operand_shape(comp, o)))
+            cost.hbm_bytes += b
+            continue
+        if op == "dynamic-slice":
+            # reads only the sliced window (+indices), not the operand
+            cost.hbm_bytes += 2 * _shape_bytes(ins.shape_str)
+            continue
+        if op == "dynamic-update-slice":
+            # writes only the updated window; the rest is aliased in place
+            upd = (_shape_bytes(_operand_shape(comp, ins.operands[1]))
+                   if len(ins.operands) > 1 else 0.0)
+            cost.hbm_bytes += 2 * upd
+            continue
+        if op in ("dot", "convolution"):
+            cost.flops += _dot_flops(comp, ins)
+        kind = next((c for c in _COLLECTIVES if op.startswith(c)), None)
+        if kind:
+            out_b = _shape_bytes(ins.shape_str)
+            in_b = sum(_shape_bytes(_operand_shape(comp, o)) for o in ins.operands)
+            n = _replica_group_size(ins.attrs)
+            if kind == "all-reduce":
+                wire = 2 * out_b * _ring_factor(kind, n)
+            elif kind == "all-gather":
+                wire = out_b * _ring_factor(kind, n)
+            elif kind == "reduce-scatter":
+                wire = in_b * _ring_factor(kind, n)
+            elif kind == "all-to-all":
+                wire = out_b * _ring_factor(kind, n)
+            else:  # collective-permute
+                wire = out_b
+            cost.coll_bytes[kind] += wire
+            cost.coll_count[kind] += 1
+            cost.hbm_bytes += in_b + out_b
+            continue
+        if op in _SKIP_BYTES_OPS:
+            continue
+        b = _shape_bytes(ins.shape_str)
+        for o in ins.operands:
+            b += _shape_bytes(_operand_shape(comp, o))
+        cost.hbm_bytes += b
+    memo[name] = cost
+    return cost
+
+
+def analyze_hlo(text: str) -> Dict[str, object]:
+    """Per-DEVICE trip-corrected flops / hbm bytes / collective wire bytes."""
+    comps = parse_hlo(text)
+    if "__entry__" not in comps:
+        raise ValueError("no ENTRY computation found")
+    memo: Dict[str, Cost] = {}
+    c = _comp_cost(comps, comps["__entry__"].name, memo)
+    return {
+        "flops_per_device": c.flops,
+        "hbm_bytes_per_device": c.hbm_bytes,
+        "collective_wire_bytes_per_device": dict(c.coll_bytes),
+        "collective_counts": dict(c.coll_count),
+        "collective_total_bytes_per_device": float(sum(c.coll_bytes.values())),
+    }

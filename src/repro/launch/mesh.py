@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+A function, not a module-level constant: importing this module never
+touches jax device state (device count locks on first jax init)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256-chip single pod (data, model), or 2 pods = 512 chips
+    with a leading 'pod' axis. data+pod are the DP/FSDP axes; 'model' is
+    tensor/expert parallel (DESIGN.md section 4)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model_parallel: int = 1):
+    """Mesh over whatever devices exist (CPU CI: 1 device; a real slice:
+    all chips) -- used by train.py/serve.py for actually-running jobs."""
+    n = len(jax.devices())
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel), ("data", "model"))

@@ -1,0 +1,82 @@
+"""Batched serving launcher: prefill a prompt batch, then decode with the
+(optionally FP8-quantized, Hadamard-rotated) KV cache -- the paper's
+deployment scenario.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b \
+        --scale 0.02 --batch 8 --prompt-len 128 --gen 32 \
+        --quant fp8_e4m3 --rotate hadamard
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.quant import QuantConfig
+from repro.launch import shapes as shp
+from repro.launch.mesh import make_local_mesh
+from repro.launch.steps import jit_prefill_step, jit_serve_step, param_shardings
+from repro.launch.train import scaled_config
+from repro.models import init_lm
+from repro.models.lm import pad_kv_caches
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--scale", type=float, default=0.02)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=128)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--quant", default="none",
+                    choices=["none", "int8", "fp8_e4m3", "fp8_e5m2"])
+    ap.add_argument("--rotate", default="none", choices=["none", "hadamard"])
+    ap.add_argument("--kernel", default="xla", choices=["xla", "pallas"])
+    ap.add_argument("--mp", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    quant = QuantConfig(mode=args.quant, rotate=args.rotate,
+                        backend=args.kernel, kv_quant=args.quant != "none")
+    cfg = scaled_config(get_config(args.arch), args.scale).with_quant(quant)
+    mesh = make_local_mesh(args.mp)
+    max_len = args.prompt_len + args.gen
+
+    with mesh:
+        ps = param_shardings(cfg, mesh)
+        params = jax.jit(lambda k: init_lm(k, cfg), out_shardings=ps)(
+            jax.random.PRNGKey(args.seed))
+
+    shape = shp.ShapeSpec("serve", "prefill", args.prompt_len, args.batch)
+    prefill, (ps_, bs) = jit_prefill_step(cfg, shape, mesh)
+    serve, _ = jit_serve_step(cfg, args.batch, max_len, mesh, donate=True)
+
+    batch = shp.make_batch(cfg, shape, seed=args.seed)
+    t0 = time.time()
+    logits, caches = prefill(params, batch)
+    caches = pad_kv_caches(cfg, caches, max_len)
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    t_prefill = time.time() - t0
+    print(f"prefill: B={args.batch} S={args.prompt_len} in {t_prefill:.2f}s")
+
+    out_tokens = [np.asarray(tok)]
+    t0 = time.time()
+    pos = args.prompt_len + (cfg.vlm_patches if cfg.family == "vlm" else 0)
+    for i in range(args.gen - 1):
+        tok, _, caches = serve(params, caches, tok,
+                               jnp.asarray(pos + i, jnp.int32))
+        out_tokens.append(np.asarray(tok))
+    dt = time.time() - t0
+    toks = np.concatenate(out_tokens, axis=1)
+    print(f"decode: {args.gen - 1} steps in {dt:.2f}s "
+          f"({(args.gen - 1) * args.batch / max(dt, 1e-9):.1f} tok/s)")
+    print("sample token ids:", toks[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

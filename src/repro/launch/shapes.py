@@ -1,0 +1,171 @@
+"""Assigned input shapes and ShapeDtypeStruct builders.
+
+``input_specs`` returns weak-type-correct, shardable stand-ins for every
+model input -- no device allocation -- for lowering; ``make_batch``
+materializes small real batches for smoke tests and examples.
+
+LM shapes (per the assignment):
+    train_4k     seq 4,096   global_batch 256   (train_step)
+    prefill_32k  seq 32,768  global_batch 32    (prefill_step)
+    decode_32k   seq 32,768  global_batch 128   (serve_step: 1 new token,
+                                                 KV cache of seq_len)
+    long_500k    seq 524,288 global_batch 1     (serve_step; SSM/hybrid only)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str        # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> Optional[str]:
+    """None if the (arch, shape) cell runs; else the reason for the skip."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return "long_500k needs sub-quadratic attention (pure full-attention arch)"
+    if shape.kind == "decode" and not cfg.has_decoder:
+        return "encoder-only arch has no decode step"
+    return None
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Model-input ShapeDtypeStructs for a train/prefill forward pass."""
+    B, S = shape.batch, shape.seq
+    dt = jnp.dtype(cfg.dtype)
+    specs: Dict[str, Any] = {}
+    if cfg.family == "vlm":
+        P = cfg.vlm_patches
+        specs["tokens"] = _sds((B, S - P), jnp.int32)
+        specs["labels"] = _sds((B, S - P), jnp.int32)
+        specs["patch_embeds"] = _sds((B, P, cfg.d_model), dt)
+        specs["positions"] = _sds((3, B, S), jnp.int32)
+    else:
+        specs["tokens"] = _sds((B, S), jnp.int32)
+        specs["labels"] = _sds((B, S), jnp.int32)
+    if cfg.is_encdec:
+        specs["frames"] = _sds((B, cfg.encoder_seq, cfg.d_model), dt)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq: int):
+    """ShapeDtypeStruct tree matching lm_decode_step's cache layout."""
+    dt = jnp.dtype(cfg.dtype)
+    kvdt = cfg.quant.kv_cache_dtype(dt)
+    KH, hd = cfg.num_kv_heads, cfg.head_dim
+    caches = []
+    for pattern, repeats in cfg.groups:
+        stack = {}
+        for j, kind in enumerate(pattern):
+            if kind in ("attn", "moe"):
+                c = {"k": _sds((repeats, batch, seq, KH, hd), kvdt),
+                     "v": _sds((repeats, batch, seq, KH, hd), kvdt)}
+            elif kind == "xattn":
+                c = {"k": _sds((repeats, batch, seq, KH, hd), kvdt),
+                     "v": _sds((repeats, batch, seq, KH, hd), kvdt),
+                     "xk": _sds((repeats, batch, cfg.encoder_seq, KH, hd), kvdt),
+                     "xv": _sds((repeats, batch, cfg.encoder_seq, KH, hd), kvdt)}
+            elif kind == "mamba":
+                d_inner = cfg.ssm_expand * cfg.d_model
+                H = d_inner // cfg.ssm_head_dim
+                c = {"ssm": _sds((repeats, batch, H, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+                     "conv_x": _sds((repeats, batch, 3, d_inner), dt),
+                     "conv_bc": _sds((repeats, batch, 3, 2 * cfg.ssm_state), dt)}
+            elif kind == "rwkv":
+                K = cfg.rwkv_head_dim
+                H = cfg.d_model // K
+                c = {"S": _sds((repeats, batch, H, K, K), jnp.float32),
+                     "xp_t": _sds((repeats, batch, cfg.d_model), dt),
+                     "xp_c": _sds((repeats, batch, cfg.d_model), dt)}
+            else:
+                raise ValueError(kind)
+            stack[f"p{j}"] = c
+        caches.append(stack)
+    return caches
+
+
+def cache_logical_specs(cfg: ModelConfig):
+    """Logical sharding axes mirroring cache_specs."""
+    caches = []
+    for pattern, repeats in cfg.groups:
+        stack = {}
+        for j, kind in enumerate(pattern):
+            if kind in ("attn", "moe"):
+                c = {"k": ("layers", "batch", "kvseq", "kv", None),
+                     "v": ("layers", "batch", "kvseq", "kv", None)}
+            elif kind == "xattn":
+                c = {"k": ("layers", "batch", "kvseq", "kv", None),
+                     "v": ("layers", "batch", "kvseq", "kv", None),
+                     "xk": ("layers", "batch", None, "kv", None),
+                     "xv": ("layers", "batch", None, "kv", None)}
+            elif kind == "mamba":
+                c = {"ssm": ("layers", "batch", "heads", None, None),
+                     "conv_x": ("layers", "batch", None, "dff"),
+                     "conv_bc": ("layers", "batch", None, None)}
+            elif kind == "rwkv":
+                c = {"S": ("layers", "batch", "heads", None, None),
+                     "xp_t": ("layers", "batch", None),
+                     "xp_c": ("layers", "batch", None)}
+            else:
+                raise ValueError(kind)
+            stack[f"p{j}"] = c
+        caches.append(stack)
+    return caches
+
+
+def batch_logical_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    specs: Dict[str, Any] = {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+    if cfg.family == "vlm":
+        specs["patch_embeds"] = ("batch", "seq", None)
+        specs["positions"] = (None, "batch", "seq")
+    if cfg.is_encdec:
+        specs["frames"] = ("batch", None, None)
+    return specs
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeSpec, seed: int = 0) -> Dict[str, Any]:
+    """Real (host) batch for smoke tests / examples. Next-token labels."""
+    rng = np.random.default_rng(seed)
+    B, S = shape.batch, shape.seq
+    dt = jnp.dtype(cfg.dtype)
+    out: Dict[str, Any] = {}
+    if cfg.family == "vlm":
+        P = cfg.vlm_patches
+        toks = rng.integers(0, cfg.vocab_size, (B, S - P + 1), dtype=np.int32)
+        out["tokens"] = jnp.asarray(toks[:, :-1])
+        out["labels"] = jnp.asarray(toks[:, 1:])
+        out["patch_embeds"] = jnp.asarray(
+            rng.standard_normal((B, P, cfg.d_model)), dtype=dt)
+        pos = np.broadcast_to(np.arange(S, dtype=np.int32), (3, B, S)).copy()
+        out["positions"] = jnp.asarray(pos)
+    else:
+        toks = rng.integers(0, cfg.vocab_size, (B, S + 1), dtype=np.int32)
+        out["tokens"] = jnp.asarray(toks[:, :-1])
+        out["labels"] = jnp.asarray(toks[:, 1:])
+    if cfg.is_encdec:
+        out["frames"] = jnp.asarray(
+            rng.standard_normal((B, cfg.encoder_seq, cfg.d_model)), dtype=dt)
+    return out

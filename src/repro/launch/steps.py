@@ -1,0 +1,223 @@
+"""Step builders: train_step / prefill_step / serve_step as pure functions,
+plus the sharding trees that pjit them onto a mesh.
+
+These are shared by the real launchers (train.py, serve.py) and the
+multi-pod dry-run (dryrun.py): the SAME functions and the SAME shardings
+are lowered in both paths, so a dry-run pass is evidence about the real
+configuration, not about a parallel implementation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.launch import shapes as shp
+from repro.models import init_lm, lm_decode_step, lm_forward, lm_loss, lm_param_specs
+from repro.models.config import ModelConfig
+from repro.optim import OptConfig, apply_updates, init_opt_state
+from repro.optim.qstate import qstate_specs
+
+
+# ------------------------------------------------------------- spec trees
+def _resolve_tree(spec_tree, shape_tree, mesh: Mesh):
+    """logical-axis tuples + ShapeDtypeStructs -> NamedShardings (with the
+    divisibility guard from distributed.sharding)."""
+    resolver = shd.make_resolver(mesh)
+
+    def one(spec, sds):
+        return resolver(spec, sds.shape)
+
+    return jax.tree.map(one, spec_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+def _init_params_fn(cfg: ModelConfig):
+    def init(key):
+        p = init_lm(key, cfg)
+        if cfg.weight_quant == "int8":
+            from repro.core.wquant import quantize_lm_weights
+            p = quantize_lm_weights(p)
+        return p
+    return init
+
+
+def param_shapes(cfg: ModelConfig):
+    return jax.eval_shape(_init_params_fn(cfg), jax.random.PRNGKey(0))
+
+
+def param_specs(cfg: ModelConfig):
+    specs = lm_param_specs(cfg)
+    if cfg.weight_quant == "int8":
+        from repro.core.wquant import qweight_specs
+        specs = qweight_specs(specs, param_shapes(cfg))
+    return specs
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh):
+    return _resolve_tree(param_specs(cfg), param_shapes(cfg), mesh)
+
+
+def opt_state_specs(cfg: ModelConfig, opt_cfg: OptConfig):
+    pspecs = lm_param_specs(cfg)
+    is_spec = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    if opt_cfg.state_dtype == "int8":
+        moments = jax.tree.map(qstate_specs, pspecs, is_leaf=is_spec)
+    else:
+        moments = pspecs
+    state = {"m": moments, "v": moments, "step": ()}
+    if opt_cfg.grad_compression == "int8_ef":
+        state["ef"] = pspecs
+    return state
+
+
+def opt_state_shapes(cfg: ModelConfig, opt_cfg: OptConfig):
+    pshapes = param_shapes(cfg)
+    return jax.eval_shape(lambda: init_opt_state(pshapes, opt_cfg))
+
+
+def opt_state_shardings(cfg: ModelConfig, opt_cfg: OptConfig, mesh: Mesh):
+    return _resolve_tree(opt_state_specs(cfg, opt_cfg),
+                         opt_state_shapes(cfg, opt_cfg), mesh)
+
+
+def batch_shardings(cfg: ModelConfig, shape: shp.ShapeSpec, mesh: Mesh):
+    return _resolve_tree(shp.batch_logical_specs(cfg),
+                         shp.batch_specs(cfg, shape), mesh)
+
+
+def cache_shardings(cfg: ModelConfig, batch: int, seq: int, mesh: Mesh):
+    return _resolve_tree(shp.cache_logical_specs(cfg),
+                         shp.cache_specs(cfg, batch, seq), mesh)
+
+
+# ------------------------------------------------------------------ steps
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig, microbatches: int = 1):
+    """microbatches > 1: gradient accumulation -- the global batch is split
+    into M sequential microbatches inside one jit step (lax.scan), dividing
+    activation memory by M at the cost of M smaller matmuls. The standard
+    way a 405B × 1M-token step fits a 512-chip slice."""
+    grad_fn = jax.value_and_grad(lm_loss, has_aux=True, argnums=1)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(cfg, params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                if x.ndim >= 2 and b % microbatches == 0:
+                    return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+                # leading-dim-first tensors (e.g. M-RoPE positions (3,B,S))
+                return jnp.broadcast_to(x, (microbatches,) + x.shape) \
+                    if x.shape[0] != batch["tokens"].shape[0] else x
+            mb = {k: split(v) for k, v in batch.items()}
+            if cfg.mrope and "positions" in batch:
+                pos = batch["positions"]  # (3, B, S) -> (M, 3, B/M, S)
+                B = pos.shape[1]
+                mb["positions"] = pos.reshape(
+                    3, microbatches, B // microbatches, -1).swapaxes(0, 1)
+
+            def acc_body(carry, micro):
+                g_acc, loss_acc = carry
+                (loss, metrics), g = grad_fn(cfg, params, micro)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, loss_acc + loss), metrics
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), metrics_all = jax.lax.scan(
+                acc_body, (g0, jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree.map(lambda g: (g / microbatches).astype(jnp.float32), grads)
+            loss = loss / microbatches
+            metrics = jax.tree.map(lambda m: m.mean(), metrics_all)
+        params, opt_state, opt_metrics = apply_updates(params, grads, opt_state, opt_cfg)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        logits, _, caches = lm_forward(cfg, params, batch, want_cache=True)
+        return logits[:, -1:], caches
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, caches, tokens, cache_pos):
+        logits, new_caches = lm_decode_step(cfg, params, caches, tokens, cache_pos)
+        new_tokens = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return new_tokens, logits, new_caches
+
+    return serve_step
+
+
+# ------------------------------------------------------- jitted assemblies
+def jit_train_step(cfg, opt_cfg, shape, mesh, *, rules_overrides=None, donate=True,
+                   microbatches: int = 1):
+    """jit(train_step) with full sharding trees; also returns the sharding
+    trees so callers can device_put params/batches consistently.
+
+    NOTE: the sharding trees are resolved INSIDE the rules context so that
+    per-cell overrides (e.g. long-context KV-cache seq sharding) apply to
+    the jit in/out shardings, not only to in-graph constraints."""
+    with shd.sharding_rules(mesh, rules_overrides):
+        ps = param_shardings(cfg, mesh)
+        os_ = opt_state_shardings(cfg, opt_cfg, mesh)
+        bs = batch_shardings(cfg, shape, mesh)
+    fn = make_train_step(cfg, opt_cfg, microbatches)
+
+    def wrapped(params, opt_state, batch):
+        with shd.sharding_rules(mesh, rules_overrides):
+            return fn(params, opt_state, batch)
+
+    jitted = jax.jit(
+        wrapped,
+        in_shardings=(ps, os_, bs),
+        out_shardings=(ps, os_, None),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    return jitted, (ps, os_, bs)
+
+
+def jit_serve_step(cfg, batch_size, cache_seq, mesh, *, rules_overrides=None,
+                   donate=True):
+    with shd.sharding_rules(mesh, rules_overrides):
+        ps = param_shardings(cfg, mesh)
+        cs = cache_shardings(cfg, batch_size, cache_seq, mesh)
+        tok_s = shd.make_resolver(mesh)(("batch", None), (batch_size, 1))
+    scalar = NamedSharding(mesh, P())
+    fn = make_serve_step(cfg)
+
+    def wrapped(params, caches, tokens, cache_pos):
+        with shd.sharding_rules(mesh, rules_overrides):
+            return fn(params, caches, tokens, cache_pos)
+
+    jitted = jax.jit(
+        wrapped,
+        in_shardings=(ps, cs, tok_s, scalar),
+        out_shardings=(tok_s, None, cs),
+        donate_argnums=(1,) if donate else (),
+    )
+    return jitted, (ps, cs, tok_s)
+
+
+def jit_prefill_step(cfg, shape, mesh, *, rules_overrides=None):
+    with shd.sharding_rules(mesh, rules_overrides):
+        ps = param_shardings(cfg, mesh)
+        bs = batch_shardings(cfg, shape, mesh)
+    fn = make_prefill_step(cfg)
+
+    def wrapped(params, batch):
+        with shd.sharding_rules(mesh, rules_overrides):
+            return fn(params, batch)
+
+    jitted = jax.jit(wrapped, in_shardings=(ps, bs), out_shardings=None)
+    return jitted, (ps, bs)

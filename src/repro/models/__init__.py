@@ -1,0 +1,9 @@
+from repro.models.config import ModelConfig  # noqa: F401
+from repro.models.lm import (  # noqa: F401
+    init_lm,
+    lm_decode_step,
+    lm_forward,
+    lm_loss,
+    lm_param_specs,
+    lm_prefill,
+)

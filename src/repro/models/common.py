@@ -1,0 +1,101 @@
+"""Shared building blocks: norms, initializers, RoPE / M-RoPE, embeddings."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------- init utils
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    s = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * s).astype(dtype)
+
+
+def stacked(key, n: int, init_fn):
+    """vmap an init over a stacked (scanned) leading axis."""
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+# --------------------------------------------------------------------- norms
+def init_norm(cfg, d: int):
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(cfg, p, x):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-5) * p["scale"] + p["bias"]
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + 1e-6) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, hd), positions: (B, S) -> rotated x (split-half style)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = rope_freqs(hd, theta)                       # (half,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def mrope_angles(positions: jnp.ndarray, hd: int, theta: float,
+                 sections: Tuple[int, ...]) -> jnp.ndarray:
+    """(3, B, S) positions -> (B, S, half) angles with per-frequency stream
+    selection (Qwen2-VL: rotary frequencies are partitioned between the
+    temporal / height / width position streams)."""
+    half = hd // 2
+    freqs = rope_freqs(hd, theta)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (3, B, S, half)
+    idx = []
+    for i, s in enumerate(sections):
+        idx.extend([i] * s)
+    idx = (idx + [0] * half)[:half]
+    sel = jax.nn.one_hot(jnp.asarray(idx, jnp.int32), 3, dtype=jnp.float32)  # (half, 3)
+    return jnp.einsum("tbsh,ht->bsh", ang, sel)
+
+
+def apply_rope_angles(x: jnp.ndarray, ang: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, H, hd), ang: (B, S, half)."""
+    half = x.shape[-1] // 2
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:].astype(jnp.float32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> jnp.ndarray:
+    """Whisper-style sinusoidal embeddings (any length -- our 448->32k
+    decode-context adaptation, see DESIGN.md)."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-math.log(10000.0) * dim / d)
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

@@ -1,0 +1,126 @@
+"""Unified model configuration covering all ten assigned architecture
+families (dense / MoE / SSM / hybrid / enc-dec / VLM) plus the paper's own
+evaluation model (Llama-3.1-8B).
+
+A model is a list of ``groups``; each group is ``(pattern, repeats)`` where
+``pattern`` is a tuple of layer kinds forming a *superblock*. Homogeneous
+superblocks let heterogeneous stacks (zamba2's 5-mamba+1-attention rhythm,
+llama4's dense/MoE interleave) still compile as ``lax.scan`` over stacked
+parameters -- essential for 126-layer dry-run compile times.
+
+Layer kinds:
+  'attn'  -- GQA/SWA attention + dense MLP
+  'moe'   -- GQA attention + mixture-of-experts MLP
+  'mamba' -- Mamba2 (SSD) mixer, no MLP (zamba2 backbone style)
+  'rwkv'  -- RWKV6 time-mix + channel-mix (attention-free)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.core.quant import QuantConfig
+
+LayerKind = str
+Group = Tuple[Tuple[LayerKind, ...], int]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm | audio
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    groups: Tuple[Group, ...]        # decoder stack (or the only stack)
+    head_dim: Optional[int] = None   # None -> d_model // num_heads
+
+    # --- encoder (whisper) ---
+    encoder_groups: Tuple[Group, ...] = ()
+    encoder_seq: int = 1500          # precomputed frame embeddings (stub frontend)
+
+    # --- attention flavor ---
+    sliding_window: int = 0          # 0 = full attention
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False           # qwen1.5
+    mrope: bool = False              # qwen2-vl M-RoPE (3 position streams)
+    mrope_sections: Tuple[int, ...] = (16, 24, 24)
+
+    # --- MoE ---
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_shared_expert: bool = False  # llama4
+    capacity_factor: float = 1.25
+
+    # --- SSM / RWKV ---
+    ssm_state: int = 0               # mamba2 N
+    ssm_head_dim: int = 64           # mamba2 P
+    ssm_expand: int = 2
+    rwkv_head_dim: int = 64
+    rwkv_impl: str = "chunked"       # chunked (GLA-style) | scan (reference)
+    rwkv_chunk: int = 32             # chunk length for the chunked form
+
+    # --- misc ---
+    act: str = "swiglu"              # swiglu | gelu
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    vocab_pad_multiple: int = 256    # pad vocab so it shards on the TP axis
+    weight_quant: str = "none"       # none | int8 (weight-only storage, serving)
+    tie_embeddings: bool = False
+    vlm_patches: int = 1024          # stub patch-embedding count (vlm only)
+    quant: QuantConfig = dataclasses.field(default_factory=QuantConfig)
+    dtype: str = "bfloat16"
+    remat: str = "dots"              # none | dots | full
+    sub_quadratic: bool = False      # eligible for long_500k
+    has_decoder: bool = True         # encoder-only models skip decode shapes
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // max(self.num_heads, 1))
+
+    @property
+    def num_layers(self) -> int:
+        return sum(len(p) * r for p, r in self.groups)
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return ((self.vocab_size + m - 1) // m) * m
+
+    @property
+    def is_encdec(self) -> bool:
+        return bool(self.encoder_groups)
+
+    def with_quant(self, quant: QuantConfig) -> "ModelConfig":
+        return dataclasses.replace(self, quant=quant)
+
+    def scaled_down(self, **overrides) -> "ModelConfig":
+        """Reduced config for CPU smoke tests: shrink every capacity knob
+        but keep the family structure (pattern kinds, GQA ratio, MoE
+        routing, quant settings) intact."""
+        ratio = max(1, self.num_heads // max(self.num_kv_heads, 1))
+        heads = max(2, ratio)  # keep GQA grouping representative
+        small = dict(
+            d_model=64 * heads // max(1, heads // 4),
+            num_heads=heads,
+            num_kv_heads=max(1, heads // ratio),
+            d_ff=128 if self.d_ff & (self.d_ff - 1) == 0 else 96,  # keep non-pow2-ness
+            vocab_size=512,
+            groups=tuple((p, min(r, 2)) for p, r in self.groups),
+            encoder_groups=tuple((p, min(r, 2)) for p, r in self.encoder_groups),
+            encoder_seq=16,
+            num_experts=min(self.num_experts, 4) if self.num_experts else 0,
+            experts_per_token=min(self.experts_per_token, 2) if self.experts_per_token else 0,
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_head_dim=16 if self.ssm_state else 64,
+            rwkv_head_dim=16,
+            sliding_window=min(self.sliding_window, 8) if self.sliding_window else 0,
+            vlm_patches=4,
+            head_dim=None,
+        )
+        small["d_model"] = 32 * heads  # head_dim 32, MXU-unaligned is fine on CPU
+        if self.name == "zamba2-7b":
+            small["d_model"] = 28 * heads  # keep the non-pow2 head_dim property
+        small.update(overrides)
+        return dataclasses.replace(self, **small)

@@ -1,0 +1,203 @@
+"""Mamba2 (SSD) mixer for the zamba2 hybrid architecture.
+
+Training/prefill uses the chunked SSD algorithm: scalar-per-head decay
+makes the pairwise intra-chunk decay matrix exact and stable in log space,
+and every term is an MXU matmul (the TPU-friendly formulation). Decode is
+the exact O(1)-per-token recurrence on the (P, N) state.
+
+Recurrence (per head, state S in R^{P x N}):
+    S_t = exp(dt_t * A) * S_{t-1} + dt_t * x_t (x) B_t
+    y_t = S_t C_t + D * x_t
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.common import dense_init
+
+_CONV_W = 4
+_CHUNK = 128
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    P = cfg.ssm_head_dim
+    H = d_inner // P
+    N = cfg.ssm_state
+    return d_inner, H, P, N
+
+
+def init_mamba(key, cfg):
+    d = cfg.d_model
+    d_inner, H, P, N = _dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_zx": dense_init(ks[0], d, 2 * d_inner, dt),
+        "w_bcdt": dense_init(ks[1], d, 2 * N + H, dt),
+        "conv_x": (jax.random.normal(ks[2], (_CONV_W, d_inner), jnp.float32) * 0.2).astype(dt),
+        "conv_bc": (jax.random.normal(ks[3], (_CONV_W, 2 * N), jnp.float32) * 0.2).astype(dt),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), math.log(math.e - 1), jnp.float32),  # softplus^-1(1)
+        "norm": jnp.ones((d_inner,), jnp.float32),
+        "w_out": dense_init(ks[4], d_inner, d, dt, scale=1.0 / math.sqrt(d_inner)),
+    }
+
+
+def mamba_specs(cfg):
+    return {
+        "w_zx": ("fsdp", "dff"),
+        "w_bcdt": ("fsdp", None),
+        "conv_x": (None, "dff"),
+        "conv_bc": (None, None),
+        "A_log": (None,),
+        "D": (None,),
+        "dt_bias": (None,),
+        "norm": ("dff",),
+        "w_out": ("dff", "fsdp"),
+    }
+
+
+def _split_proj(cfg, p, x):
+    d_inner, H, P, N = _dims(cfg)
+    zx = x @ p["w_zx"]
+    z, xs = zx[..., :d_inner], zx[..., d_inner:]
+    bcdt = x @ p["w_bcdt"]
+    b = bcdt[..., :N]
+    c = bcdt[..., N:2 * N]
+    dt_raw = bcdt[..., 2 * N:]
+    return z, xs, b, c, dt_raw
+
+
+def _causal_depthwise(x, w):
+    """x: (B,S,C), w: (W,C) -> causal depthwise conv, silu activation."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(W))
+    return jax.nn.silu(y)
+
+
+class MambaState(NamedTuple):
+    ssm: jnp.ndarray      # (B, H, P, N) f32
+    conv_x: jnp.ndarray   # (B, W-1, d_inner)
+    conv_bc: jnp.ndarray  # (B, W-1, 2N)
+
+
+def init_mamba_state(cfg, batch: int, dtype=jnp.float32) -> MambaState:
+    d_inner, H, P, N = _dims(cfg)
+    return MambaState(
+        ssm=jnp.zeros((batch, H, P, N), jnp.float32),
+        conv_x=jnp.zeros((batch, _CONV_W - 1, d_inner), dtype),
+        conv_bc=jnp.zeros((batch, _CONV_W - 1, 2 * N), dtype),
+    )
+
+
+def apply_mamba(cfg, p, x, *, return_state: bool = False):
+    """Full-sequence chunked SSD. x: (B,S,d)."""
+    B, S, d = x.shape
+    d_inner, H, P, N = _dims(cfg)
+    z, xs_raw, b_raw, c_raw, dt_raw = _split_proj(cfg, p, x)
+    bc_raw = jnp.concatenate([b_raw, c_raw], -1)
+    xs = _causal_depthwise(xs_raw, p["conv_x"])
+    bc = _causal_depthwise(bc_raw, p["conv_bc"])
+    b, c = bc[..., :N], bc[..., N:]
+
+    Tc = _CHUNK if S % _CHUNK == 0 else (S if S < _CHUNK else None)
+    if Tc is None:
+        raise ValueError(f"seq {S} not divisible by chunk {_CHUNK}")
+    nc = S // Tc
+
+    xh = constrain(xs.reshape(B, nc, Tc, H, P), "batch", None, None, "heads", None).astype(jnp.float32)
+    bv = b.reshape(B, nc, Tc, N).astype(jnp.float32)
+    cv = c.reshape(B, nc, Tc, N).astype(jnp.float32)
+    dtv = jax.nn.softplus(dt_raw.reshape(B, nc, Tc, H).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])                                  # (H,) negative
+    l = dtv * A                                               # (B,nc,Tc,H) log-decay
+    L = jnp.cumsum(l, axis=2)                                 # inclusive cumsum
+
+    # intra-chunk: W[t,j] = (C_t.B_j) exp(L_t - L_j) dt_j  (j<=t)
+    cb = jnp.einsum("bctn,bcjn->bctj", cv, bv)                # (B,nc,Tc,Tc)
+    diff = L[:, :, :, None, :] - L[:, :, None, :, :]          # (B,nc,Tc,Tc,H)
+    mask = jnp.tril(jnp.ones((Tc, Tc), bool))
+    M = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    W = cb[..., None] * M * dtv[:, :, None, :, :]             # (B,nc,t,j,H)
+    y_intra = jnp.einsum("bctjh,bcjhp->bcthp", W, xh)
+
+    # inter-chunk carry scan
+    decay_in = jnp.exp(L)                                     # decay from chunk start
+    kx = jnp.einsum("bcjh,bcjhp,bcjn->bchpn",
+                    dtv * jnp.exp(L[:, :, -1:, :] - L), xh, bv)  # chunk state contribution
+    chunk_decay = jnp.exp(L[:, :, -1, :])                     # (B,nc,H)
+
+    def scan_fn(S0, inp):
+        kxc, dc = inp                                         # (B,H,P,N), (B,H)
+        S1 = S0 * dc[:, :, None, None] + kxc
+        return S1, S0
+
+    kx_t = jnp.moveaxis(kx, 1, 0)                             # (nc,B,H,P,N)
+    dc_t = jnp.moveaxis(chunk_decay, 1, 0)                    # (nc,B,H)
+    S0 = jnp.zeros((B, H, P, N), jnp.float32)
+    S_last, S_starts = jax.lax.scan(scan_fn, S0, (kx_t, dc_t))
+    S_starts = jnp.moveaxis(S_starts, 0, 1)                   # (B,nc,H,P,N)
+
+    y_carry = jnp.einsum("bctn,bchpn,bcth->bcthp", cv, S_starts, decay_in)
+    y = (y_intra + y_carry).reshape(B, S, H, P)
+    y = y + p["D"][None, None, :, None] * xs.reshape(B, S, H, P).astype(jnp.float32)
+    y = y.reshape(B, S, d_inner)
+
+    # gated RMSNorm + out-proj
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = y * jax.lax.rsqrt(jnp.mean(jnp.square(y), -1, keepdims=True) + 1e-6) * p["norm"]
+    out = constrain((y.astype(x.dtype) @ p["w_out"]), "batch", "seq", None)
+    if return_state:
+        state = MambaState(
+            ssm=S_last,
+            conv_x=_tail(xs_raw, x.dtype),
+            conv_bc=_tail(bc_raw, x.dtype),
+        )
+        return out, state
+    return out
+
+
+def _tail(seq_bsd, dtype):
+    """Last W-1 *pre-conv* inputs become the decode conv state."""
+    return seq_bsd[:, -(_CONV_W - 1):, :].astype(dtype)
+
+
+def decode_mamba(cfg, p, x, state: MambaState) -> Tuple[jnp.ndarray, MambaState]:
+    """Single-token recurrent step. x: (B,1,d)."""
+    B, S, d = x.shape
+    d_inner, H, P, N = _dims(cfg)
+    z, xs, b, c, dt_raw = _split_proj(cfg, p, x)
+
+    # depthwise conv over [state, new token]
+    cx = jnp.concatenate([state.conv_x, xs], axis=1)          # (B,W,dinner)
+    xs1 = jax.nn.silu(jnp.einsum("bwc,wc->bc", cx, p["conv_x"]))[:, None, :]
+    cbc = jnp.concatenate([state.conv_bc, jnp.concatenate([b, c], -1)], axis=1)
+    bc1 = jax.nn.silu(jnp.einsum("bwc,wc->bc", cbc, p["conv_bc"]))[:, None, :]
+    b1, c1 = bc1[..., :N], bc1[..., N:]
+
+    dtv = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dtv * A)                                  # (B,H)
+    xh = xs1[:, 0].reshape(B, H, P).astype(jnp.float32)
+    S1 = state.ssm * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dtv, xh, b1[:, 0].astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", S1, c1[:, 0].astype(jnp.float32))
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(B, 1, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = y * jax.lax.rsqrt(jnp.mean(jnp.square(y), -1, keepdims=True) + 1e-6) * p["norm"]
+    out = y.astype(x.dtype) @ p["w_out"]
+    new_state = MambaState(
+        ssm=S1,
+        conv_x=cx[:, 1:, :],
+        conv_bc=cbc[:, 1:, :],
+    )
+    return out, new_state

@@ -1,0 +1,1 @@
+from repro.optim.adamw import OptConfig, init_opt_state, apply_updates  # noqa: F401

@@ -1,0 +1,59 @@
+"""Blockwise-int8 optimizer-state quantization (8-bit Adam).
+
+At 405B-dense scale, f32 Adam moments are the single largest HBM consumer
+(8 bytes/param = 6.3 GB/chip on the 512-chip mesh). Blockwise int8 with
+per-256-block f32 absmax scales cuts that 4x -- thematically the same
+outlier-vs-dynamic-range trade the paper's rotations address for
+activations. dynamic range of Adam moments within a 256-block is narrow,
+so plain absmax int8 holds training quality (8-bit Adam, Dettmers et al.).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+_BLOCK = 256
+
+
+def quantize_state(x: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """f32 tensor -> {'q': int8, 's': f32 per-block scales, 'n': orig last dim}."""
+    shape = x.shape
+    last = shape[-1] if shape else 1
+    pad = (-last) % _BLOCK
+    xf = x.astype(jnp.float32).reshape(-1, last)
+    if pad:
+        xf = jnp.pad(xf, ((0, 0), (0, pad)))
+    xb = xf.reshape(xf.shape[0], -1, _BLOCK)
+    s = jnp.maximum(jnp.max(jnp.abs(xb), axis=-1, keepdims=True), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xb / s), -127, 127).astype(jnp.int8)
+    return {"q": q.reshape(xf.shape[0], -1), "s": s[..., 0].reshape(xf.shape[0], -1)}
+
+
+def dequantize_state(t: Dict[str, jnp.ndarray], shape) -> jnp.ndarray:
+    q = t["q"].astype(jnp.float32).reshape(t["q"].shape[0], -1, _BLOCK)
+    x = (q * t["s"][..., None]).reshape(t["q"].shape[0], -1)
+    last = shape[-1] if shape else 1
+    return x[:, :last].reshape(shape)
+
+
+def zeros_like_qstate(x: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    return quantize_state(jnp.zeros(x.shape, jnp.float32))
+
+
+def qstate_specs(param_spec: tuple) -> Dict[str, Any]:
+    """Logical sharding for a quantized-state leaf. The moment tensors are
+    stored flattened to (rows, cols); rows merge all leading dims, so we
+    shard rows on the param's first SHARDABLE logical axis (skipping
+    'layers'=None stacking axes -- picking the first axis blindly left
+    405B moments replicated: a measured 94->256 GB/device regression)."""
+    lead = next((a for a in param_spec[:-1] if a is not None), None)
+    last = param_spec[-1] if len(param_spec) > 1 else None
+    if lead is None and param_spec and len(param_spec) == 1:
+        lead = param_spec[-1]
+        last = None
+    # 2D sharding: rows on the first shardable leading axis, cols on the
+    # param's last axis (405B f32 moments shard 512-way; the flattened int8
+    # layout must too, or it LOSES memory vs f32 -- measured 94->256 GB).
+    return {"q": (lead, last), "s": (lead, last)}

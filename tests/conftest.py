@@ -1,0 +1,28 @@
+import subprocess
+import sys
+
+import pytest
+
+
+def run_py_subprocess(code: str, devices: int = 8, timeout: int = 600):
+    """Run python code in a subprocess with N fake XLA host devices.
+
+    Multi-device tests need this because jax locks the device count at
+    first init; the main pytest process keeps the default single device
+    (per the dry-run isolation requirement)."""
+    env = {
+        "XLA_FLAGS": f"--xla_force_host_platform_device_count={devices}",
+        "PYTHONPATH": "src",
+        "PATH": "/usr/bin:/bin:/usr/local/bin",
+        "HOME": "/root",
+    }
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=timeout, env=env, cwd="/root/repo")
+    if r.returncode != 0:
+        raise AssertionError(f"subprocess failed:\nSTDOUT:{r.stdout}\nSTDERR:{r.stderr}")
+    return r.stdout
+
+
+@pytest.fixture
+def subproc():
+    return run_py_subprocess

@@ -1,0 +1,84 @@
+"""End-to-end launcher tests: train (with checkpoint/restart + preemption
+semantics), serve, and the fault-tolerance contract."""
+import os
+
+import numpy as np
+import pytest
+
+
+def test_train_runs_and_checkpoints(tmp_path, capsys):
+    from repro.launch.train import main
+    ck = str(tmp_path / "ckpt")
+    main(["--arch", "llama3-8b", "--scale", "0.005", "--steps", "6",
+          "--seq", "32", "--batch", "4", "--ckpt-every", "3",
+          "--ckpt-dir", ck, "--log-every", "2"])
+    out = capsys.readouterr().out
+    assert "step     5" in out
+    from repro.checkpoint import latest_step
+    assert latest_step(ck) == 6
+
+
+def test_train_restart_resumes_identically(tmp_path, capsys):
+    """Fault-tolerance contract: a run killed at step 4 and restarted
+    produces the same final loss as an uninterrupted run (stateless data
+    pipeline + checkpointed params/optimizer)."""
+    from repro.launch.train import main
+    args = ["--arch", "llama3-8b", "--scale", "0.005", "--seq", "32",
+            "--batch", "4", "--log-every", "1"]
+    # uninterrupted 8-step run
+    main(args + ["--steps", "8"])
+    out_full = capsys.readouterr().out
+    # interrupted at 4 + resumed
+    ck = str(tmp_path / "ckpt2")
+    main(args + ["--steps", "4", "--ckpt-every", "4", "--ckpt-dir", ck])
+    capsys.readouterr()
+    main(args + ["--steps", "8", "--ckpt-every", "4", "--ckpt-dir", ck])
+    out_resumed = capsys.readouterr().out
+    assert "restoring checkpoint step 4" in out_resumed
+
+    def last_loss(txt):
+        lines = [l for l in txt.splitlines() if l.startswith("step")]
+        return float(lines[-1].split("loss")[1].split()[0])
+
+    assert abs(last_loss(out_full) - last_loss(out_resumed)) < 2e-2
+
+
+def test_train_with_rotation_quant_and_tricks(capsys):
+    """All the distributed-optimization features on at once."""
+    from repro.launch.train import main
+    main(["--arch", "mixtral-8x7b", "--scale", "0.004", "--steps", "3",
+          "--seq", "32", "--batch", "2", "--quant", "int8",
+          "--rotate", "hadamard", "--opt-state", "int8",
+          "--grad-compression", "int8_ef", "--log-every", "1"])
+    out = capsys.readouterr().out
+    losses = [float(l.split("loss")[1].split()[0])
+              for l in out.splitlines() if l.startswith("step")]
+    assert all(np.isfinite(losses))
+
+
+def test_serve_runs(capsys):
+    from repro.launch.serve import main
+    main(["--arch", "llama3-8b", "--scale", "0.005", "--batch", "2",
+          "--prompt-len", "16", "--gen", "5",
+          "--quant", "fp8_e4m3", "--rotate", "hadamard"])
+    out = capsys.readouterr().out
+    assert "decode:" in out and "tok/s" in out
+
+
+def test_dryrun_importable_without_512_devices():
+    """dryrun.py sets XLA_FLAGS at import; here we only check the module
+    parses and its roofline helpers work (the full 512-dev run is the
+    background artifact job)."""
+    import importlib.util
+    spec = importlib.util.find_spec("repro.launch.dryrun")
+    assert spec is not None
+    from repro.launch.flops import model_flops, count_params
+    from repro.configs import get_config
+    from repro.launch.shapes import SHAPES
+    cfg = get_config("llama3_405b")
+    n = count_params(cfg)["total"]
+    assert 3.8e11 < n < 4.3e11
+    f_train = model_flops(cfg, SHAPES["train_4k"])
+    assert f_train > 6 * n * 4096 * 256  # at least 6ND
+    f_dec = model_flops(cfg, SHAPES["decode_32k"])
+    assert f_dec < f_train

@@ -1,0 +1,112 @@
+"""The while-aware HLO analyzer that feeds the roofline table."""
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import (
+    _shape_bytes,
+    _split_operands,
+    analyze_hlo,
+    parse_hlo,
+)
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[128,512]{1,0}") == 128 * 512 * 4
+    assert _shape_bytes("bf16[7,512,128]") == 7 * 512 * 128 * 2
+    assert _shape_bytes("(s32[], bf16[4,4])") == 4 + 32
+    assert _shape_bytes("pred[10]") == 10
+    assert _shape_bytes("f8e4m3fn[100]") == 100
+    # tuple with /*index=N*/ comments (real XLA print format)
+    assert _shape_bytes("(s32[], f32[2,2], /*index=2*/bf16[4])") == 4 + 16 + 8
+
+
+def test_split_operands():
+    ops = _split_operands("%a, %b.2), kind=kLoop, calls=%c")
+    assert ops == ["a", "b.2"]
+
+
+def test_scan_flops_trip_corrected(subproc):
+    """A scan of L matmuls must report L x the single-matmul FLOPs."""
+    out = subproc("""
+import jax, jax.numpy as jnp
+from repro.launch.hlo_analysis import analyze_hlo
+L, M, K, N = 7, 64, 128, 96
+def f(x, w):
+    def body(c, wi):
+        return c @ wi, ()
+    y, _ = jax.lax.scan(body, x, w)
+    return y.sum()
+comp = jax.jit(f).lower(jax.ShapeDtypeStruct((M, K), jnp.float32),
+                        jax.ShapeDtypeStruct((L, K, K), jnp.float32)).compile()
+res = analyze_hlo(comp.as_text())
+true = 2 * M * K * K * L
+ratio = res["flops_per_device"] / true
+assert 0.9 < ratio < 1.2, (res["flops_per_device"], true)
+print("FLOPS_OK", ratio)
+""", devices=1)
+    assert "FLOPS_OK" in out
+
+
+def test_collectives_detected_inside_scan(subproc):
+    """FSDP-style: all-gather inside a scanned layer body is multiplied by
+    the trip count."""
+    out = subproc("""
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.hlo_analysis import analyze_hlo
+mesh = jax.make_mesh((4,), ("data",))
+L, D = 5, 256
+def f(x, w):
+    def body(c, wi):
+        return jnp.tanh(c @ wi), ()
+    y, _ = jax.lax.scan(body, x, w)
+    return y.sum()
+comp = jax.jit(f, in_shardings=(NamedSharding(mesh, P(None, None)),
+                                NamedSharding(mesh, P(None, "data", None)))) \
+    .lower(jax.ShapeDtypeStruct((8, D), jnp.float32),
+           jax.ShapeDtypeStruct((L, D, D), jnp.float32)).compile()
+res = analyze_hlo(comp.as_text())
+total = res["collective_total_bytes_per_device"]
+counts = res["collective_counts"]
+# XLA partial-dots the sharded contraction and all-reduces the (8,D)
+# activation once per layer iteration: ring wire = 2*8*D*4*(3/4) per trip
+per_iter = 2 * 8 * D * 4 * 3 / 4
+assert sum(counts.values()) >= L, counts
+assert total >= per_iter * L * 0.9, (total, counts)
+print("COLL_OK", total, counts)
+""", devices=4)
+    assert "COLL_OK" in out
+
+
+def test_parse_hlo_handles_tuple_whiles():
+    text = """HloModule test, entry_computation_layout={()->f32[]}
+
+%body (p: (s32[], f32[4,4])) -> (s32[], f32[4,4]) {
+  %p = (s32[], f32[4,4]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[4,4] get-tuple-element(%p), index=1
+  %d = f32[4,4] dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[4,4]) tuple(%ip, %d)
+}
+
+%cond (p: (s32[], f32[4,4])) -> pred[] {
+  %p = (s32[], f32[4,4]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(11)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main () -> f32[] {
+  %c = f32[4,4] constant(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[4,4]) tuple(%z, %c)
+  %w = (s32[], f32[4,4]) while(%t0), condition=%cond, body=%body
+  %r = f32[4,4] get-tuple-element(%w), index=1
+  ROOT %s = f32[] reduce(%r, %z), dimensions={0,1}, to_apply=%body
+}
+"""
+    res = analyze_hlo(text)
+    # 11 iterations x (2*4*4*4) dot flops
+    assert res["flops_per_device"] == 11 * 2 * 4 * 4 * 4

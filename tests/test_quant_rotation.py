@@ -1,0 +1,141 @@
+"""Rotation-based quantization: the paper's deployment semantics.
+
+Checks: (i) offline fusion is exact in full precision, (ii) online rotation
+reduces INT8/FP8 quantization error on outlier-heavy activations (the
+QuaRot premise the paper's kernel serves), (iii) rotated FP8 attention
+matches unrotated full-precision attention closely (section 4.2 proxy)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import QuantConfig, quant_dot, quantize
+from repro.core.rotations import (
+    fuse_rotation_lhs,
+    online_hadamard,
+    rotation_matrix,
+)
+from repro.models import attention as A
+from repro.configs import get_config
+
+
+def _outlier_acts(rng, rows, d, k=8, mag=40.0):
+    x = rng.standard_normal((rows, d)).astype(np.float32)
+    idx = rng.choice(d, k, replace=False)
+    x[:, idx] *= mag
+    return x
+
+
+@pytest.mark.parametrize("d", [1024, 4096, 14336])  # incl. non-pow2 (7*2048)
+def test_rotation_reduces_int8_quant_error(d):
+    """INT8's fixed grid suffers badly from outliers: rotation must cut the
+    quantized-matmul error at least in half (QuaRot's core claim)."""
+    rng = np.random.default_rng(0)
+    x = _outlier_acts(rng, 64, d)
+    w = (rng.standard_normal((d, 256)) * 0.02).astype(np.float32)
+    ref = x @ w
+    cfg_q = QuantConfig(mode="int8")
+    cfg_qr = QuantConfig(mode="int8", rotate="hadamard", backend="xla")
+    err_plain = np.abs(np.asarray(quant_dot(jnp.asarray(x), jnp.asarray(w), cfg_q)) - ref).mean()
+    Q = rotation_matrix(d)
+    xr = online_hadamard(jnp.asarray(x), cfg_qr)
+    wr = fuse_rotation_lhs(jnp.asarray(w), Q)
+    err_rot = np.abs(np.asarray(quant_dot(xr, wr, cfg_qr)) - ref).mean()
+    assert err_rot * 2.0 < err_plain, (err_plain, err_rot)
+
+
+@pytest.mark.parametrize("d", [1024, 4096])
+def test_rotation_fp8_error_bounded(d):
+    """FP8 is a *relative*-precision format: quantization noise energy is
+    rotation-invariant for unstructured weights, so rotation neither helps
+    nor hurts the matmul error much (the paper's own FP8 MMLU deltas are
+    fractions of a point). Assert boundedness, not improvement -- and
+    record the measured ratio in EXPERIMENTS.md."""
+    rng = np.random.default_rng(0)
+    x = _outlier_acts(rng, 64, d, mag=2000.0)
+    w = (rng.standard_normal((d, 256)) * 0.02).astype(np.float32)
+    ref = x @ w
+    cfg_q = QuantConfig(mode="fp8_e4m3")
+    cfg_qr = QuantConfig(mode="fp8_e4m3", rotate="hadamard", backend="xla")
+    err_plain = np.abs(np.asarray(quant_dot(jnp.asarray(x), jnp.asarray(w), cfg_q)) - ref).mean()
+    Q = rotation_matrix(d)
+    xr = online_hadamard(jnp.asarray(x), cfg_qr)
+    wr = fuse_rotation_lhs(jnp.asarray(w), Q)
+    err_rot = np.abs(np.asarray(quant_dot(xr, wr, cfg_qr)) - ref).mean()
+    assert err_rot < err_plain * 2.0, (err_plain, err_rot)
+
+
+@settings(deadline=None, max_examples=10)
+@given(logd=st.integers(5, 10), seed=st.integers(0, 10**6))
+def test_offline_fusion_exactness(logd, seed):
+    """x Q @ Q^T W == x W exactly (rotation cancels in full precision)."""
+    d = 2 ** logd
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((8, d)).astype(np.float32)
+    w = rng.standard_normal((d, 32)).astype(np.float32)
+    key = jax.random.PRNGKey(seed)
+    Q = rotation_matrix(d, key=key)
+    got = (jnp.asarray(x) @ Q) @ fuse_rotation_lhs(jnp.asarray(w), Q)
+    np.testing.assert_allclose(np.asarray(got), x @ w, rtol=2e-3, atol=2e-3)
+
+
+def test_rotated_qk_preserves_attention_scores():
+    """had(q) . had(k) == q . k -- the reason FP8 attention can rotate."""
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((2, 16, 4, 128)), dtype=jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 16, 4, 128)), dtype=jnp.float32)
+    cfg = QuantConfig(rotate="hadamard", backend="xla")
+    qr, kr = online_hadamard(q, cfg), online_hadamard(k, cfg)
+    s0 = jnp.einsum("bshd,bthd->bhst", q, k)
+    s1 = jnp.einsum("bshd,bthd->bhst", qr, kr)
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1), rtol=1e-3, atol=1e-3)
+
+
+def test_fp8_attention_with_rotation_close_to_fp16(
+
+):
+    """Paper section 4.2 microcosm: FP8 attention + rotation stays close to
+    the full-precision attention output (the paper's claim is comparable
+    accuracy, not strict dominance -- its HadaCore MMLU is 65.09 vs 64.40
+    unrotated and 65.45 for the reference kernel)."""
+    rng = np.random.default_rng(2)
+    cfg16 = get_config("llama3_8b").scaled_down()
+    B, S, H, KH, hd = 2, 32, cfg16.num_heads, cfg16.num_kv_heads, cfg16.head_dim
+    q = rng.standard_normal((B, S, H, hd)).astype(np.float32)
+    k = rng.standard_normal((B, S, KH, hd)).astype(np.float32)
+    k[..., 3] *= 30.0  # outlier head-dim channel (the QuaRot scenario)
+    v = rng.standard_normal((B, S, KH, hd)).astype(np.float32)
+    mask = A._causal_mask(cfg16, S, S)
+
+    ref = A._sdpa(cfg16, jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), mask)
+
+    def fp8_attn(rotate):
+        qq, kk = jnp.asarray(q), jnp.asarray(k)
+        if rotate:
+            c = QuantConfig(mode="fp8_e4m3", rotate="hadamard", backend="xla")
+            qq, kk = online_hadamard(qq, c), online_hadamard(kk, c)
+        qq = quantize(qq, "fp8_e4m3", axis=-1)
+        kk = quantize(kk, "fp8_e4m3", axis=-1)
+        return A._sdpa(cfg16, qq, kk, jnp.asarray(v), mask)
+
+    scale = np.abs(np.asarray(ref)).mean()
+    err_plain = np.abs(np.asarray(fp8_attn(False)) - np.asarray(ref)).mean()
+    err_rot = np.abs(np.asarray(fp8_attn(True)) - np.asarray(ref)).mean()
+    # "comparable accuracy": both within a few % of the fp16 output scale.
+    # Which variant wins is data-dependent at matmul level (fp8 noise is
+    # rotation-invariant); the paper's end-to-end gain shows up on real
+    # LLM activations -- measured in benchmarks/bench_quant_accuracy.py.
+    assert err_rot < 0.1 * scale, (err_rot, scale)
+    assert err_plain < 0.1 * scale, (err_plain, scale)
+
+
+def test_quantize_shapes_and_range():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((4, 7, 33)) * 100, dtype=jnp.float32)
+    for mode in ("int8", "fp8_e4m3", "fp8_e5m2"):
+        y = quantize(x, mode, axis=-1)
+        assert y.shape == x.shape and y.dtype == x.dtype
+        rel = np.abs(np.asarray(y - x)).mean() / np.abs(np.asarray(x)).mean()
+        assert rel < 0.05, (mode, rel)
+    assert quantize(x, "none") is x

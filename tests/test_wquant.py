@@ -1,0 +1,56 @@
+"""Weight-only INT8 storage (Perf iteration C4/C4')."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.wquant import dequant_tree, is_qleaf, quantize_lm_weights
+from repro.launch.shapes import ShapeSpec, make_batch
+from repro.models import init_lm, lm_loss
+from repro.models.lm import pad_kv_caches, lm_prefill, lm_decode_step
+
+
+def test_quantize_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((512, 384)) * 0.05, jnp.bfloat16)
+    q = quantize_lm_weights({"groups": [{"p0": {"attn": {"wq": w}}}]})
+    leaf = q["groups"][0]["p0"]["attn"]["wq"]
+    assert is_qleaf(leaf) and leaf["wq"].dtype == jnp.int8
+    back = dequant_tree(leaf, jnp.float32)
+    err = np.abs(np.asarray(back) - np.asarray(w, np.float32)).max()
+    assert err < float(jnp.abs(w.astype(jnp.float32)).max()) / 100
+
+
+def test_small_leaves_not_quantized():
+    p = {"norm1": {"scale": jnp.ones((512,))},
+         "bias": jnp.zeros((128,)),
+         "big": jnp.ones((512, 512), jnp.bfloat16)}
+    q = quantize_lm_weights(p)
+    assert not is_qleaf(q["norm1"]["scale"]) and not is_qleaf(q["bias"])
+    assert is_qleaf(q["big"])
+
+
+@pytest.mark.parametrize("arch", ["llama3_8b", "mixtral_8x7b", "rwkv6_7b"])
+def test_int8_weights_model_close(arch):
+    cfg0 = get_config(arch).scaled_down()
+    cfg = dataclasses.replace(cfg0, weight_quant="int8")
+    batch = make_batch(cfg0, ShapeSpec("t", "train", 32, 2))
+    params = init_lm(jax.random.PRNGKey(0), cfg0)
+    l0, _ = lm_loss(cfg0, params, batch)
+    l1, _ = lm_loss(cfg, quantize_lm_weights(params), batch)
+    assert abs(float(l0) - float(l1)) < 0.25, (float(l0), float(l1))
+
+
+def test_int8_weights_decode_path():
+    cfg0 = get_config("llama3_8b").scaled_down()
+    cfg = dataclasses.replace(cfg0, weight_quant="int8")
+    batch = make_batch(cfg0, ShapeSpec("t", "train", 32, 2))
+    qparams = quantize_lm_weights(init_lm(jax.random.PRNGKey(0), cfg0))
+    logits, caches = lm_prefill(cfg, qparams, batch)
+    caches = pad_kv_caches(cfg, caches, 40)
+    tok = jnp.argmax(logits[..., :cfg.vocab_size], -1).astype(jnp.int32)
+    lg, _ = lm_decode_step(cfg, qparams, caches, tok, jnp.asarray(32, jnp.int32))
+    assert np.isfinite(np.asarray(lg[..., :cfg.vocab_size], np.float32)).all()
