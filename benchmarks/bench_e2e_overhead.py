@@ -31,10 +31,10 @@ def _time(fn, *args, iters=8):
     return (time.perf_counter() - t0) / iters * 1e3
 
 
-def run(csv: List[str]):
+def run(csv: List[str], smoke: bool = False):
     rng = np.random.default_rng(0)
-    B, d = 512, 1024
-    for dff in (4096, 6912, 14336):  # pow2, 27*256, 7*2048
+    B, d = (64, 1024) if smoke else (512, 1024)
+    for dff in (4096, 6912) if smoke else (4096, 6912, 14336):  # pow2, 27*256, 7*2048
         x = jnp.asarray(rng.standard_normal((B, d)), jnp.float32)
         w_up = jnp.asarray(rng.standard_normal((d, dff)) * 0.02, jnp.float32)
         w_down = jnp.asarray(rng.standard_normal((dff, d)) * 0.02, jnp.float32)

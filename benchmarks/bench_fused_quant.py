@@ -1,37 +1,80 @@
 """Beyond-paper (the paper's stated future work): fused Hadamard+quantize
 kernel vs. the two-step rotate-then-quantize, measured as HBM bytes moved
-(the TPU-relevant metric; both are memory-bound) plus CPU-interpret
-correctness cost."""
+(the TPU-relevant metric; both are memory-bound) plus CPU wall-clock of
+the two algorithm shapes and interpret-mode correctness cost.
+
+Sweeps every registered quantize epilogue (int8, fp8_e4m3, fp8_e5m2)
+through the plan-based API: ``hadamard(x, plan)`` with a ``QuantEpilogue``
+is one ``pallas_call``; the two-step baseline is the same plan without an
+epilogue followed by ``core.quant.quantize``.
+"""
 from __future__ import annotations
 
+import time
 from typing import List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.api import QuantEpilogue, hadamard, plan_for
 from repro.core.quant import quantize
-from repro.kernels.fused_quant import fused_hadamard_quantize
-from repro.kernels.ops import hadamard
+from repro.kernels.registry import QSPECS
+
+MODES = tuple(QSPECS)  # sweep every registered epilogue mode
 
 
-def run(csv: List[str]):
+def _time(fn, *args, iters: int = 5) -> float:
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e3  # ms
+
+
+def _hbm_bytes(rows: int, n: int, dtype_bytes: int = 2):
+    """Analytic HBM traffic (bf16 activations on TPU). Every registered
+    quant mode stores 1 byte/element + 4 bytes/row of scales."""
+    q_bytes = 1
+    two_step = (
+        rows * n * dtype_bytes * 2            # rotate: read x, write y
+        + rows * n * (dtype_bytes + q_bytes)  # quantize: read y, write q
+        + rows * 4                            # scales
+    )
+    fused = rows * n * (dtype_bytes + q_bytes) + rows * 4  # read x, write q+s
+    return two_step, fused
+
+
+def run(csv: List[str], smoke: bool = False):
     rng = np.random.default_rng(0)
-    for n in (2048, 4096):
-        rows = 1 << 14
-        dtype_bytes = 2  # bf16 activations on TPU
-        # two-step: read x, write y (bf16); read y, write q(int8)+scales
-        bytes_two = rows * n * dtype_bytes * 2 + rows * n * (dtype_bytes + 1) + rows * 4
-        # fused: read x, write q + scales
-        bytes_fused = rows * n * (dtype_bytes + 1) + rows * 4
-        x = jnp.asarray(rng.standard_normal((256, n)), jnp.float32)
-        q, s = fused_hadamard_quantize(x)          # correctness exercised
-        y2 = quantize(hadamard(x), "int8", axis=-1)
-        deq = np.asarray(q, np.float32) * np.asarray(s)
-        err = np.abs(deq - np.asarray(y2)).max() / np.abs(np.asarray(y2)).max()
-        csv.append(
-            f"fused_quant,n={n},hbm_bytes_two_step={bytes_two},"
-            f"hbm_bytes_fused={bytes_fused},"
-            f"traffic_reduction={bytes_two/bytes_fused:.2f}x,"
-            f"max_rel_err_vs_twostep={err:.2e}")
+    sizes = (2048,) if smoke else (2048, 4096)
+    rows_model = 1 << (10 if smoke else 14)
+    bench_rows = 64 if smoke else 256
+    for n in sizes:
+        x = jnp.asarray(rng.standard_normal((bench_rows, n)), jnp.float32)
+        rot_plan = plan_for(n, backend="pallas")
+        for mode in MODES:
+            plan = plan_for(n, backend="pallas", epilogue=QuantEpilogue(mode))
+            bytes_two, bytes_fused = _hbm_bytes(rows_model, n)
+
+            fused_fn = jax.jit(lambda a, p=plan: hadamard(a, p))
+            two_fn = jax.jit(
+                lambda a, p=rot_plan, m=mode: quantize(hadamard(a, p), m, axis=-1)
+            )
+            t_fused = _time(fused_fn, x)
+            t_two = _time(two_fn, x)  # same backend, rotate + separate quantize
+
+            # correctness: dequantized fused output tracks the two-step path
+            q, s = fused_fn(x)
+            y2 = np.asarray(two_fn(x))
+            deq = np.asarray(q, np.float32) * np.asarray(s)
+            err = np.abs(deq - y2).max() / np.abs(y2).max()
+            csv.append(
+                f"fused_quant,n={n},mode={mode},"
+                f"hbm_bytes_two_step={bytes_two},"
+                f"hbm_bytes_fused={bytes_fused},"
+                f"traffic_reduction={bytes_two/bytes_fused:.2f}x,"
+                f"fused_ms={t_fused:.2f},two_step_ms={t_two:.2f},"
+                f"max_rel_err_vs_twostep={err:.2e}")
     return csv

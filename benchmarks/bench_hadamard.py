@@ -53,10 +53,12 @@ def tpu_roofline_us(rows: int, n: int, dtype_bytes: int = 2) -> dict:
             "bound": "memory" if mem / HBM_BW > flops / PEAK_FLOPS else "compute"}
 
 
-def run(csv: List[str]):
+def run(csv: List[str], smoke: bool = False):
+    sizes = [128, 1024] if smoke else SIZES
+    elem_counts = [2**15] if smoke else ELEM_COUNTS
     dense_cache = {}
-    for n in SIZES:
-        for elems in ELEM_COUNTS:
+    for n in sizes:
+        for elems in elem_counts:
             rows = max(1, elems // n)
             x = jnp.asarray(np.random.default_rng(0).standard_normal((rows, n)),
                             dtype=jnp.float32)
@@ -80,18 +82,20 @@ def run(csv: List[str]):
                 f"tpu_bound={rf['bound']}")
 
     # Appendix C: dtype sweep at a representative size
+    drows = 256 if smoke else 4096
     for dt, name in ((jnp.float32, "f32"), (jnp.bfloat16, "bf16"),
                      (jnp.float16, "f16")):
-        x = jnp.asarray(np.random.default_rng(1).standard_normal((4096, 2048)),
+        x = jnp.asarray(np.random.default_rng(1).standard_normal((drows, 2048)),
                         dtype=dt)
         t = _time(jax.jit(lambda a: hadamard_transform(a)), x)
-        rf = tpu_roofline_us(4096, 2048, jnp.dtype(dt).itemsize)
+        rf = tpu_roofline_us(drows, 2048, jnp.dtype(dt).itemsize)
         csv.append(f"hadamard_dtype,dtype={name},factored_us={t:.1f},"
                    f"tpu_roofline_us={max(rf['t_mem_us'], rf['t_compute_us']):.2f}")
 
     # Appendix B: in-place (buffer donation) vs out-of-place
-    x = jnp.asarray(np.random.default_rng(2).standard_normal((8192, 2048)),
-                    dtype=jnp.float32)
+    x = jnp.asarray(
+        np.random.default_rng(2).standard_normal((512 if smoke else 8192, 2048)),
+        dtype=jnp.float32)
     f_out = jax.jit(lambda a: hadamard_transform(a))
     f_in = jax.jit(lambda a: hadamard_transform(a), donate_argnums=0)
     t_out = _time(f_out, x)

@@ -56,12 +56,12 @@ def _train_small(cfg, shape, steps=120, seed=0):
     return params, structured
 
 
-def run(csv: List[str]):
+def run(csv: List[str], smoke: bool = False):
     from repro.core.rotations import fuse_down_proj_rotations
 
     base = get_config("llama3_8b").scaled_down()
     shape = ShapeSpec("bench", "train", 64, 8)
-    params, data_fn = _train_small(base, shape)
+    params, data_fn = _train_small(base, shape, steps=10 if smoke else 120)
     # post-training deployment: the offline half of the rotation is fused
     # into the trained weights once (exact rewrite)
     params_rotated = fuse_down_proj_rotations(params)

@@ -17,6 +17,9 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes / few steps: CI guard that the perf "
+                         "scripts still run, not a measurement")
     args = ap.parse_args()
 
     from benchmarks import (  # noqa: PLC0415
@@ -38,7 +41,7 @@ def main() -> None:
             continue
         t0 = time.time()
         print(f"# running {name} ...", file=sys.stderr)
-        fn(csv)
+        fn(csv, smoke=args.smoke)
         print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
     for line in csv:
         print(line)

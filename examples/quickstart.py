@@ -8,11 +8,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.api import QuantEpilogue, hadamard, plan_for
 from repro.core.hadamard import hadamard_transform
 from repro.core.quant import QuantConfig, quant_dot
 from repro.core.rotations import fuse_rotation_lhs, online_hadamard, rotation_matrix
 from repro.kernels.hadacore import hadacore
-from repro.kernels.ops import hadamard
 from repro.kernels.ref import fwht, hadamard_matrix
 
 rng = np.random.default_rng(0)
@@ -27,9 +27,24 @@ print("kernel vs oracle max err:",
 print("xla    vs oracle max err:",
       float(jnp.abs(y_xla - y_ref).max()))
 
-# 2. It is a rotation: orthonormal, self-inverse ------------------------
+# 2. The unified API: one entry point, plans cached per shape -----------
+# hadamard(x) builds (and caches) a plan keyed on (n, dtype, backend,
+# epilogue, scale); prebuild one to pin every decision for a hot path.
+plan = plan_for(4096, backend="pallas")
+print("plan:", f"n={plan.n} backend={plan.backend} passes={plan.num_passes}")
+print("plan vs oracle max err:", float(jnp.abs(hadamard(x, plan) - y_ref).max()))
+
+# It is a rotation: orthonormal, self-inverse
 print("self-inverse err:", float(jnp.abs(hadamard(hadamard(x)) - x).max()))
 print("norm ratio:", float(jnp.linalg.norm(hadamard(x)) / jnp.linalg.norm(x)))
+
+# Composable quantize epilogues: rotate + quantize in ONE kernel; the
+# quantized tensor and per-token scales are the only HBM outputs.
+q, s = hadamard(x, epilogue=QuantEpilogue("int8"))
+print("fused int8:", q.dtype, q.shape, "scales:", s.shape)
+qf, sf = hadamard(x, epilogue=QuantEpilogue("fp8_e4m3"))
+print("fused fp8_e4m3:", qf.dtype,
+      "dequant err:", float(jnp.abs(qf.astype(jnp.float32) * sf - y_ref).max()))
 
 # 3. Why LLM quantization wants it: outlier smearing --------------------
 acts = rng.standard_normal((64, 4096)).astype(np.float32)

@@ -1,3 +1,10 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+#
+# Public surface: the plan-based API in repro.core.api (DESIGN.md
+# section 5) — hadamard / plan_for / HadamardPlan / QuantEpilogue.
+# (Not re-exported here: repro.core.hadamard the submodule and
+# repro.core.api.hadamard the function would collide, and the
+# api -> kernels.registry -> core.hadamard import chain must stay
+# acyclic through this package __init__.)

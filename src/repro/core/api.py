@@ -1,0 +1,362 @@
+"""Unified plan-based Hadamard API: one entry point for every transform.
+
+This is the seam the whole repo routes rotations through (DESIGN.md
+section 5). Instead of four divergent entry points with string-typed
+knobs, callers build (or let us cache) a :class:`HadamardPlan` --
+everything shape-dependent is precomputed exactly once per
+``(n, dtype, backend, epilogue, scale, block_m)`` key:
+
+  * the 128-factorization ``n = 128^k * r`` and the stacked per-pass base
+    matrices (including the I (x) H_r diagonal tiling for r > 1 and the
+    scale folded into pass 0);
+  * the resolved backend (registry lookup: explicit > env override >
+    auto-by-size/platform);
+  * the VMEM row-tile ``block_m``.
+
+and ``hadamard(x, plan)`` dispatches. Composable epilogues make the fused
+rotate+quantize kernel the default hot path:
+
+  * ``epilogue=None``                     -> rotated tensor
+  * ``QuantEpilogue("int8"|"fp8_e4m3"|"fp8_e5m2", per_token=True)``
+                                          -> ``(q, scales)`` from a single
+                                             VMEM-resident kernel
+  * ``QuantEpilogue(..., dequant=True)``  -> fake-quantized rotated tensor
+                                             (training path), same single
+                                             kernel
+
+Non-power-of-2 sizes are handled by the grouped transform I_g (x) H_p
+with p the largest power-of-2 divisor (DESIGN.md section 3): the plan
+carries both ``n`` (full axis) and ``p`` (per-group transform size), and
+epilogue scales stay per-FULL-token (computed outside the kernel in that
+case, so grouped semantics match the historical two-step path).
+
+Autodiff: the transform is its own adjoint (H symmetric, scale scalar),
+so the pullback is one more transform. Epilogue paths carry the
+straight-through estimator: quantization is treated as identity in the
+backward pass, so ``d(q)/dx ~= H/s`` and ``d(dequant)/dx ~= H``. This is
+a DELIBERATE training-numerics upgrade over differentiating the unfused
+``quantize(hadamard(x))`` directly, whose ``round()`` has zero gradient
+almost everywhere (only the absmax scale branch leaks signal) -- the STE
+is the standard QAT estimator and is what the fused path exists to serve.
+Forward numerics are unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.dtypes import float0
+
+from repro.core.hadamard import (
+    base_matrices_np,
+    factorize,
+    largest_pow2_divisor,
+    resolve_scale,
+)
+from repro.kernels import registry
+from repro.kernels.ref import is_pow2
+from repro.kernels.registry import QSPECS, get_backend, select_backend
+
+__all__ = [
+    "QuantEpilogue",
+    "HadamardPlan",
+    "plan_for",
+    "make_plan",
+    "hadamard",
+    "plan_cache_info",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantEpilogue:
+    """Quantization epilogue applied to the rotated tensor before write-back.
+
+    mode:      'int8' | 'fp8_e4m3' | 'fp8_e5m2'
+    per_token: one symmetric absmax scale per (full-length) token row;
+               False = one scale per tensor (never fusable: needs a
+               global reduction, so it always runs as transform +
+               XLA epilogue).
+    dequant:   return the fake-quantized (quantize->dequantize) rotated
+               tensor in the input dtype instead of ``(q, scales)`` --
+               the training-path form consumed by fake-quant matmuls.
+    """
+
+    mode: str
+    per_token: bool = True
+    dequant: bool = False
+
+    def __post_init__(self):
+        if self.mode not in QSPECS:
+            raise ValueError(
+                f"unknown quantization mode {self.mode!r}; "
+                f"expected one of {sorted(QSPECS)}"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class HadamardPlan:
+    """Everything shape-dependent about one Hadamard configuration,
+    computed once and cached. Hashable (the stacked base matrices are
+    excluded from eq/hash), so jitted implementations take the plan as a
+    static argument and XLA caches per plan."""
+
+    n: int                           # full last-axis size
+    p: int                           # per-group pow2 transform size (== n when pow2)
+    dtype: str                       # canonical input/output dtype name
+    backend: str                     # resolved registry backend name
+    scale: Optional[float]           # numeric scale folded into pass 0 (None = +-1)
+    epilogue: Optional[QuantEpilogue]
+    block_m: Optional[int]           # VMEM row tile (None = per-call heuristic)
+    k: int                           # number of 128-factors of p
+    r: int                           # residual pow2 factor (1 <= r < 128)
+    mats: np.ndarray = dataclasses.field(repr=False, compare=False, default=None)
+
+    @property
+    def grouped(self) -> bool:
+        return self.p != self.n
+
+    @property
+    def num_passes(self) -> int:
+        return 0 if self.p == 1 else int(self.mats.shape[0])
+
+
+@functools.lru_cache(maxsize=None)
+def _build_plan(n, p, dtype_name, scale_val, backend, epilogue, block_m):
+    if p == 1:
+        k, r, mats = 0, 1, np.ones((1, 1, 1), np.float32)
+    else:
+        k, r = factorize(p)
+        mats = np.stack(base_matrices_np(p, scale_val))
+    return HadamardPlan(
+        n=n, p=p, dtype=dtype_name, backend=backend, scale=scale_val,
+        epilogue=epilogue, block_m=block_m, k=k, r=r, mats=mats,
+    )
+
+
+def plan_for(
+    n: int,
+    *,
+    dtype: Any = jnp.float32,
+    scale: Union[str, float, None] = "ortho",
+    backend: Optional[str] = None,
+    epilogue: Optional[QuantEpilogue] = None,
+    block_m: Optional[int] = None,
+) -> HadamardPlan:
+    """Build (or fetch from the cache) the plan for an n-point transform.
+
+    ``backend=None`` resolves via the registry: ``REPRO_HADAMARD_BACKEND``
+    env override first, then auto-selection by size/platform. Non-power-
+    of-2 ``n`` plans the grouped transform on the largest power-of-2
+    divisor. Repeated calls with the same key return the *same* plan
+    object, so downstream jit caches hit.
+    """
+    if n < 1:
+        raise ValueError(f"Hadamard size must be >= 1, got {n}")
+    p = n if is_pow2(n) else largest_pow2_divisor(n)
+    scale_val = resolve_scale(scale, p)
+    resolved = select_backend(p, backend)
+    return _build_plan(
+        n, p, jnp.dtype(dtype).name, scale_val, resolved, epilogue, block_m
+    )
+
+
+# Alias: ISSUE/API docs name both; plan_for reads better at call sites.
+make_plan = plan_for
+
+
+def plan_cache_info():
+    """Plan-cache statistics (functools.lru_cache CacheInfo)."""
+    return _build_plan.cache_info()
+
+
+def _strip(plan: HadamardPlan) -> HadamardPlan:
+    """The epilogue-free twin of a plan (used by fallbacks and pullbacks)."""
+    if plan.epilogue is None:
+        return plan
+    return _build_plan(
+        plan.n, plan.p, plan.dtype, plan.scale, plan.backend, None, plan.block_m
+    )
+
+
+# -------------------------------------------------------------- dispatch
+def _group(x: jnp.ndarray, plan: HadamardPlan) -> jnp.ndarray:
+    return x.reshape(*x.shape[:-1], plan.n // plan.p, plan.p)
+
+
+def _dispatch_transform(x, plan: HadamardPlan, interpret: bool):
+    if plan.p == 1:
+        return x if plan.scale is None else x * jnp.asarray(plan.scale, x.dtype)
+    be = get_backend(plan.backend)
+    if plan.grouped:
+        return be.transform(_group(x, plan), plan, interpret).reshape(x.shape)
+    return be.transform(x, plan, interpret)
+
+
+def _apply_epilogue_xla(y, epi: QuantEpilogue, out_dtype):
+    """Reference epilogue on an already-rotated tensor (used when the
+    backend has no fused path, for per-tensor scales, and for grouped
+    transforms where the scale must span the full token row). Shares
+    ``registry._quantize_rows`` with the fused kernels so numerics agree
+    bit-for-bit."""
+    q, s = registry._quantize_rows(
+        y.astype(jnp.float32), epi.mode, axis=-1 if epi.per_token else None)
+    if epi.dequant:
+        return registry._dequantize(q, s, epi.mode).astype(out_dtype)
+    return q.astype(QSPECS[epi.mode][1]), s
+
+
+def _fusable(plan: HadamardPlan) -> bool:
+    be = get_backend(plan.backend)
+    return (
+        not plan.grouped
+        and plan.p > 1
+        and plan.epilogue.per_token
+        and be.fused is not None
+        and be.supports(plan.p)
+    )
+
+
+def _dispatch_fused(x, plan: HadamardPlan, interpret: bool):
+    if _fusable(plan):
+        return get_backend(plan.backend).fused(x, plan, interpret)
+    y = _dispatch_transform(x, _strip(plan), interpret)
+    return _apply_epilogue_xla(y, plan.epilogue, x.dtype)
+
+
+def _dispatch_fused_dequant(x, plan: HadamardPlan, interpret: bool):
+    if _fusable(plan):
+        return get_backend(plan.backend).fused_dequant(x, plan, interpret)
+    y = _dispatch_transform(x, _strip(plan), interpret)
+    return _apply_epilogue_xla(y, plan.epilogue, x.dtype)
+
+
+# -------------------------------------------------------------- autodiff
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def _transform(x, plan: HadamardPlan, interpret: bool):
+    return _dispatch_transform(x, plan, interpret)
+
+
+def _transform_fwd(x, plan, interpret):
+    return _dispatch_transform(x, plan, interpret), None
+
+
+def _transform_bwd(plan, interpret, _res, g):
+    # H^T = H and the scale is scalar: the op is self-adjoint.
+    return (_dispatch_transform(g, plan, interpret),)
+
+
+_transform.defvjp(_transform_fwd, _transform_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def _fused(x, plan: HadamardPlan, interpret: bool):
+    return _dispatch_fused(x, plan, interpret)
+
+
+def _fused_fwd(x, plan, interpret):
+    q, s = _dispatch_fused(x, plan, interpret)
+    return (q, s), s
+
+
+def _fused_bwd(plan, interpret, s, ct):
+    """Straight-through: q = had(x)/s with s treated as a statistic, so
+    the pullback of gq is had(gq)/s and the scale branch contributes
+    nothing. int8 outputs are integer-typed (float0 cotangent): their
+    quantized branch is non-differentiable by construction -- use
+    ``QuantEpilogue(dequant=True)`` for the training path."""
+    gq, _gs = ct
+    if gq.dtype == float0:
+        return (jnp.zeros(gq.shape, jnp.dtype(plan.dtype)),)
+    gy = gq.astype(jnp.float32) / s
+    gx = _dispatch_transform(gy, _strip(plan), interpret)
+    return (gx.astype(jnp.dtype(plan.dtype)),)
+
+
+_fused.defvjp(_fused_fwd, _fused_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def _fused_dequant(x, plan: HadamardPlan, interpret: bool):
+    return _dispatch_fused_dequant(x, plan, interpret)
+
+
+def _fused_dequant_fwd(x, plan, interpret):
+    return _dispatch_fused_dequant(x, plan, interpret), None
+
+
+def _fused_dequant_bwd(plan, interpret, _res, g):
+    # Straight-through on quantize-dequantize: the op behaves as the plain
+    # rotation in the backward pass (NOT the raw fake-quant grad, whose
+    # round() is zero a.e. -- see module docstring).
+    return (_dispatch_transform(g, _strip(plan), interpret),)
+
+
+_fused_dequant.defvjp(_fused_dequant_fwd, _fused_dequant_bwd)
+
+
+# ----------------------------------------------------------- entry point
+_UNSET = object()  # distinguishes "not passed" from an explicit default
+
+
+def hadamard(
+    x: jnp.ndarray,
+    plan: Optional[HadamardPlan] = None,
+    *,
+    scale: Union[str, float, None] = _UNSET,
+    backend: Optional[str] = _UNSET,
+    epilogue: Optional[QuantEpilogue] = _UNSET,
+    block_m: Optional[int] = _UNSET,
+    interpret: Optional[bool] = None,
+) -> Union[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Walsh-Hadamard transform of the last axis -- THE entry point.
+
+    With ``plan=None`` a plan is built (and cached) from the keyword
+    arguments and ``x``'s shape/dtype; passing an explicit plan skips all
+    per-call decisions (plan-configuration keywords may then not be
+    passed -- the plan already pins them, and silently ignoring a
+    conflicting ``epilogue=...`` would change the return type). Returns
+    the rotated tensor, or ``(q, scales)`` when the plan carries a
+    :class:`QuantEpilogue` (the fake-quantized tensor when the epilogue
+    has ``dequant=True``).
+
+    ``interpret=None`` auto-selects Pallas interpret mode off-TPU so CPU
+    CI validates the same kernel code path.
+    """
+    n = x.shape[-1]
+    if plan is None:
+        plan = plan_for(
+            n, dtype=x.dtype,
+            scale="ortho" if scale is _UNSET else scale,
+            backend=None if backend is _UNSET else backend,
+            epilogue=None if epilogue is _UNSET else epilogue,
+            block_m=None if block_m is _UNSET else block_m,
+        )
+    else:
+        passed = [name for name, v in (("scale", scale), ("backend", backend),
+                                       ("epilogue", epilogue),
+                                       ("block_m", block_m)) if v is not _UNSET]
+        if passed:
+            raise ValueError(
+                f"hadamard() got both an explicit plan and {passed}; plan "
+                "configuration is fixed at plan_for() time"
+            )
+        if plan.n != n:
+            raise ValueError(
+                f"plan was built for n={plan.n} but x has last axis {n}"
+            )
+        if jnp.dtype(plan.dtype) != x.dtype:
+            raise ValueError(
+                f"plan was built for dtype {plan.dtype} but x is {x.dtype.name}; "
+                "build a plan with plan_for(n, dtype=x.dtype, ...)"
+            )
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if plan.epilogue is None:
+        return _transform(x, plan, interpret)
+    if plan.epilogue.dequant:
+        return _fused_dequant(x, plan, interpret)
+    return _fused(x, plan, interpret)

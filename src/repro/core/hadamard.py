@@ -34,12 +34,36 @@ __all__ = [
     "MXU_TILE",
     "factorize",
     "base_matrices",
+    "base_matrices_np",
     "hadamard_transform",
     "grouped_hadamard",
     "largest_pow2_divisor",
+    "resolve_scale",
 ]
 
 MXU_TILE = 128
+
+
+def resolve_scale(scale, n: int) -> Optional[float]:
+    """Resolve a user-facing ``scale`` argument to a numeric multiplier.
+
+    Accepted values: ``"ortho"`` (1/sqrt(n), the orthonormal rotation),
+    ``None`` (the unnormalized +-1 transform), or an explicit number.
+    Anything else -- e.g. the typo ``"orth"`` that used to silently fall
+    through to the unscaled transform -- raises ``ValueError``.
+    """
+    if scale is None:
+        return None
+    if isinstance(scale, str):
+        if scale == "ortho":
+            return 1.0 / math.sqrt(n)
+        raise ValueError(
+            f"unknown Hadamard scale {scale!r}: expected 'ortho', None, "
+            "or an explicit numeric scale"
+        )
+    if isinstance(scale, (int, float)) and not isinstance(scale, bool):
+        return float(scale)
+    raise ValueError(f"unknown Hadamard scale {scale!r}")
 
 
 def factorize(n: int) -> Tuple[int, int]:
@@ -56,8 +80,8 @@ def factorize(n: int) -> Tuple[int, int]:
     return k, n
 
 
-def base_matrices(n: int, scale: Optional[float], dtype=jnp.float32) -> List[jnp.ndarray]:
-    """Per-pass base matrices, minor-axis pass FIRST.
+def base_matrices_np(n: int, scale: Optional[float]) -> List[np.ndarray]:
+    """Per-pass base matrices (numpy f32), minor-axis pass FIRST.
 
     All matrices are 128x128 when n >= 128 (the r-pass is the
     block-diagonal tiling I_{128/r} (x) H_r). For n < 128 a single n x n
@@ -79,7 +103,12 @@ def base_matrices(n: int, scale: Optional[float], dtype=jnp.float32) -> List[jnp
         mats.extend(hadamard_matrix(MXU_TILE) for _ in range(k))
     if scale is not None:
         mats[0] = mats[0] * np.float32(scale)
-    return [jnp.asarray(m, dtype=dtype) for m in mats]
+    return mats
+
+
+def base_matrices(n: int, scale: Optional[float], dtype=jnp.float32) -> List[jnp.ndarray]:
+    """``base_matrices_np`` as device arrays (see DESIGN.md section 2)."""
+    return [jnp.asarray(m, dtype=dtype) for m in base_matrices_np(n, scale)]
 
 
 def _apply_passes(x: jnp.ndarray, n: int, mats: List[jnp.ndarray]) -> jnp.ndarray:
@@ -108,10 +137,9 @@ def _apply_passes(x: jnp.ndarray, n: int, mats: List[jnp.ndarray]) -> jnp.ndarra
     return x
 
 
-@partial(jax.jit, static_argnames=("scale_mode",))
-def _hadamard_transform_jit(x: jnp.ndarray, scale_mode: str) -> jnp.ndarray:
+@partial(jax.jit, static_argnames=("scale",))
+def _hadamard_transform_jit(x: jnp.ndarray, scale: Optional[float]) -> jnp.ndarray:
     n = x.shape[-1]
-    scale = 1.0 / math.sqrt(n) if scale_mode == "ortho" else None
     mats = base_matrices(n, scale)
     orig_shape, orig_dtype = x.shape, x.dtype
     y = _apply_passes(x.astype(jnp.float32).reshape(-1, n), n, mats)
@@ -121,9 +149,10 @@ def _hadamard_transform_jit(x: jnp.ndarray, scale_mode: str) -> jnp.ndarray:
 def hadamard_transform(x: jnp.ndarray, scale: Optional[str] = "ortho") -> jnp.ndarray:
     """Right Hadamard transform of the last axis, MXU-factored, pure JAX.
 
-    scale: "ortho" (1/sqrt(n), a rotation) or None (+-1 transform).
+    scale: "ortho" (1/sqrt(n), a rotation), None (+-1 transform), or an
+    explicit numeric multiplier. Unknown strings raise ``ValueError``.
     """
-    return _hadamard_transform_jit(x, "ortho" if scale == "ortho" else "none")
+    return _hadamard_transform_jit(x, resolve_scale(scale, max(x.shape[-1], 1)))
 
 
 def largest_pow2_divisor(n: int) -> int:

@@ -18,10 +18,6 @@ import jax.numpy as jnp
 
 __all__ = ["QuantConfig", "quantize", "quant_dot", "kv_quantize"]
 
-_INT8_MAX = 127.0
-_FP8_E4M3_MAX = 448.0
-_FP8_E5M2_MAX = 57344.0
-
 
 @dataclasses.dataclass(frozen=True)
 class QuantConfig:
@@ -31,6 +27,8 @@ class QuantConfig:
     rotate:  'none' | 'hadamard'  (online Hadamard rotations at the QuaRot
              insertion points; offline R1/R2 fusion is applied at init)
     backend: 'pallas' (hadacore kernel) | 'xla' (factored pure-JAX path)
+             | 'ref' (scalar FWHT oracle) | 'auto' (registry selection:
+             REPRO_HADAMARD_BACKEND env override, then size/platform)
     kv_quant: quantize the KV cache (FP8 attention use-case of the paper)
     """
     mode: str = "none"
@@ -38,6 +36,18 @@ class QuantConfig:
     backend: str = "xla"
     kv_quant: bool = False
     per_token: bool = True
+
+    _MODES = ("none", "int8", "fp8_e4m3", "fp8_e5m2")
+    _ROTATES = ("none", "hadamard")
+    _BACKENDS = ("pallas", "xla", "ref", "auto")
+
+    def __post_init__(self):
+        if self.mode not in self._MODES:
+            raise ValueError(f"unknown quant mode {self.mode!r}; expected one of {self._MODES}")
+        if self.rotate not in self._ROTATES:
+            raise ValueError(f"unknown rotate {self.rotate!r}; expected one of {self._ROTATES}")
+        if self.backend not in self._BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; expected one of {self._BACKENDS}")
 
     @property
     def enabled(self) -> bool:
@@ -59,33 +69,25 @@ class QuantConfig:
         return model_dtype
 
 
-def _absmax(x: jnp.ndarray, axis: Optional[int], keepdims: bool = True) -> jnp.ndarray:
-    m = jnp.max(jnp.abs(x), axis=axis, keepdims=keepdims)
-    return jnp.maximum(m, 1e-8)
-
-
 def quantize(x: jnp.ndarray, mode: str, axis: Optional[int] = -1) -> jnp.ndarray:
     """Symmetric fake-quantize along ``axis`` (None = per-tensor).
 
     int8: round-to-nearest to [-127, 127]. fp8: scale to the format's max
     then cast through the real fp8 dtype (XLA convert), preserving the
     format's mantissa truncation and dynamic range exactly.
+
+    Delegates to ``kernels.registry._quantize_rows`` -- the same math the
+    fused rotate+quantize kernels run in VMEM -- so the two-step and
+    fused paths agree bit-for-bit by construction.
     """
     if mode == "none":
         return x
-    dt = x.dtype
-    xf = x.astype(jnp.float32)
-    if mode == "int8":
-        s = _absmax(xf, axis) / _INT8_MAX
-        q = jnp.clip(jnp.round(xf / s), -_INT8_MAX, _INT8_MAX)
-        return (q * s).astype(dt)
-    if mode in ("fp8_e4m3", "fp8_e5m2"):
-        fmax = _FP8_E4M3_MAX if mode == "fp8_e4m3" else _FP8_E5M2_MAX
-        fdt = jnp.float8_e4m3fn if mode == "fp8_e4m3" else jnp.float8_e5m2
-        s = _absmax(xf, axis) / fmax
-        q = (xf / s).astype(fdt).astype(jnp.float32)
-        return (q * s).astype(dt)
-    raise ValueError(f"unknown quant mode {mode!r}")
+    from repro.kernels.registry import QSPECS, _dequantize, _quantize_rows
+
+    if mode not in QSPECS:
+        raise ValueError(f"unknown quant mode {mode!r}")
+    q, s = _quantize_rows(x.astype(jnp.float32), mode, axis=axis)
+    return _dequantize(q, s, mode).astype(x.dtype)
 
 
 def quant_dot(x: jnp.ndarray, w: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:

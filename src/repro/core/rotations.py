@@ -28,17 +28,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.hadamard import (
-    grouped_hadamard,
-    hadamard_transform,
-    largest_pow2_divisor,
-)
-from repro.core.quant import QuantConfig
-from repro.kernels.ops import hadamard as hadamard_op
-from repro.kernels.ref import hadamard_matrix, is_pow2
+from repro.core.api import QuantEpilogue, hadamard, plan_for
+from repro.core.hadamard import grouped_hadamard, largest_pow2_divisor
+from repro.core.quant import QuantConfig, quantize
+from repro.kernels.ref import hadamard_matrix
 
 __all__ = [
     "online_hadamard",
+    "online_hadamard_quantize",
+    "rotated_quant_dot",
     "rotation_matrix",
     "rotate_activation_in",
     "fuse_rotation_rhs",
@@ -47,22 +45,62 @@ __all__ = [
 ]
 
 
+def _cfg_backend(cfg: QuantConfig):
+    # "auto" defers to the registry (env override, then size/platform).
+    return None if cfg.backend == "auto" else cfg.backend
+
+
 def online_hadamard(x: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
     """Online orthonormal Hadamard rotation of the last axis.
 
-    Dispatch: power-of-2 sizes <= 32768 go to the hadacore Pallas kernel
-    (cfg.backend == 'pallas') or the MXU-factored XLA path; non-power-of-2
-    sizes use the grouped transform I_g (x) H_p with p the largest
-    power-of-2 divisor.
+    A thin plan lookup into :mod:`repro.core.api`: the plan (cached per
+    shape/dtype/backend) handles kernel-vs-XLA dispatch and non-power-of-2
+    sizes via the grouped transform I_g (x) H_p (DESIGN.md sections 3, 5).
     """
     if not cfg.rotating:
         return x
-    n = x.shape[-1]
-    if is_pow2(n):
-        return hadamard_op(x, "ortho", cfg.backend)
-    p = largest_pow2_divisor(n)
-    xg = x.reshape(*x.shape[:-1], n // p, p)
-    return hadamard_op(xg, "ortho", cfg.backend).reshape(x.shape)
+    plan = plan_for(x.shape[-1], dtype=x.dtype, backend=_cfg_backend(cfg))
+    return hadamard(x, plan)
+
+
+def online_hadamard_quantize(
+    x: jnp.ndarray, cfg: QuantConfig, *, per_token: Optional[bool] = None
+) -> jnp.ndarray:
+    """Online rotation + fake quantization of the last axis, fused.
+
+    The hot-path form of ``quantize(online_hadamard(x, cfg), ...)``: with
+    ``cfg.backend == 'pallas'`` (power-of-2 sizes, per-token scales) the
+    rotation, per-token absmax, and quantize-dequantize round trip run in
+    ONE VMEM-resident kernel -- the rotated tensor never round-trips
+    through HBM. Other configurations fall back to the two-step path with
+    identical forward numerics. Both paths are differentiable via the
+    straight-through estimator (quantize behaves as identity in the
+    pullback -- deliberately NOT the raw fake-quant gradient, whose
+    round() is zero almost everywhere; see repro.core.api).
+    """
+    pt = cfg.per_token if per_token is None else per_token
+    if not cfg.enabled:
+        return online_hadamard(x, cfg)
+    if not cfg.rotating:
+        return quantize(x, cfg.mode, axis=-1 if pt else None)
+    epi = QuantEpilogue(cfg.mode, per_token=pt, dequant=True)
+    plan = plan_for(
+        x.shape[-1], dtype=x.dtype, backend=_cfg_backend(cfg), epilogue=epi
+    )
+    return hadamard(x, plan)
+
+
+def rotated_quant_dot(x: jnp.ndarray, w: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
+    """``x @ w`` with the online Hadamard on x's contraction axis and
+    fake-quantized operands -- the down-projection hot path (per-token
+    scales on the activation, per-out-channel scales on the weight). The
+    activation side is a single fused rotate+quantize kernel whenever the
+    plan supports it."""
+    if not cfg.enabled:
+        return online_hadamard(x, cfg) @ w
+    xq = online_hadamard_quantize(x, cfg)
+    wq = quantize(w, cfg.mode, axis=0)
+    return xq @ wq
 
 
 def rotation_matrix(n: int, key: Optional[jax.Array] = None) -> jnp.ndarray:

@@ -20,7 +20,9 @@ from jax.experimental.shard_map import shard_map
 def _ring_body(x_local: jnp.ndarray, axis: str):
     """x_local: this shard's (already int8-compressed values as f32)
     contribution. Ring-reduce over `axis` with int8 payload per hop."""
-    n = jax.lax.axis_size(axis)
+    # jax.lax.axis_size only exists in newer jax; psum(1) is the portable
+    # spelling of "number of shards on this axis"
+    n = int(jax.lax.psum(1, axis))
     idx = jax.lax.axis_index(axis)
     perm = [(i, (i + 1) % n) for i in range(n)]
 

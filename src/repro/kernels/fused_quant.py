@@ -1,81 +1,34 @@
-"""Fused Hadamard-transform + quantization kernel (beyond-paper).
+"""DEPRECATED shim: fused Hadamard-transform + quantization (beyond-paper).
 
 The paper's conclusion names "kernel fusion to support fused Hadamard
 transform and quantization" as future work. On TPU the fusion is natural:
 the rotated row block is already resident in VMEM after the matmul passes,
 so the per-token absmax reduction and int8/fp8 cast happen before the
-write-back -- the quantized tensor (plus scales) is the ONLY HBM output,
-halving output bytes vs. rotate-then-quantize as two kernels (which writes
-the rotated f32/bf16 tensor and re-reads it).
+write-back -- the quantized tensor (plus scales) is the ONLY HBM output.
 
-Outputs: (q: int8[..., n], scales: f32[...]) with per-row symmetric scales
--- exactly what a following int8 matmul / FP8 attention consumes.
+The kernel now lives in ``repro.kernels.registry`` (the pallas backend's
+``fused`` path), generalized from int8-only to fp8_e4m3 / fp8_e5m2, and is
+reached through the plan API::
+
+    from repro.core.api import QuantEpilogue, hadamard
+    q, s = hadamard(x, epilogue=QuantEpilogue("int8"))
+
+``fused_hadamard_quantize`` is kept as a bitwise-identical int8 wrapper;
+``ref_fused`` is the pure-jnp oracle, extended with a ``mode`` argument so
+fp8 epilogues validate against the same ground truth.
 """
 from __future__ import annotations
 
-import functools
-import math
 from typing import Optional, Tuple
 
-import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
-from repro.core.hadamard import _apply_passes, base_matrices
-from repro.kernels.hadacore import MAX_KERNEL_SIZE, default_block_m
+from repro.core.api import QuantEpilogue, hadamard
+from repro.core.hadamard import resolve_scale
+from repro.kernels.ref import is_pow2
+from repro.kernels.registry import MAX_KERNEL_SIZE, QSPECS, _quantize_rows
 
-_INT8_MAX = 127.0
-
-
-def _fused_kernel(x_ref, mats_ref, q_ref, s_ref, *, n: int):
-    x = x_ref[...].astype(jnp.float32)
-    bm = x.shape[0]
-    mats = [mats_ref[p] for p in range(mats_ref.shape[0])]
-    y = _apply_passes(x.reshape(bm, n), n, mats)
-    s = jnp.maximum(jnp.max(jnp.abs(y), axis=-1, keepdims=True), 1e-8) / _INT8_MAX
-    q = jnp.clip(jnp.round(y / s), -_INT8_MAX, _INT8_MAX)
-    q_ref[...] = q.astype(jnp.int8)
-    s_ref[...] = s
-
-
-@functools.partial(jax.jit, static_argnames=("scale_mode", "block_m", "interpret"))
-def _fused_call(x, scale_mode: str, block_m: Optional[int], interpret: bool):
-    n = x.shape[-1]
-    scale = 1.0 / math.sqrt(n) if scale_mode == "ortho" else None
-    mats = jnp.stack(base_matrices(n, scale))
-    b = mats.shape[-1]
-
-    orig_shape = x.shape
-    m = 1
-    for d in x.shape[:-1]:
-        m *= d
-    x2 = x.reshape(m, n)
-    bm = block_m or default_block_m(n, m, x.dtype)
-    pad = (-m) % bm
-    if pad:
-        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
-    mp = x2.shape[0]
-
-    q, s = pl.pallas_call(
-        functools.partial(_fused_kernel, n=n),
-        grid=(mp // bm,),
-        in_specs=[
-            pl.BlockSpec((bm, n), lambda i: (i, 0)),
-            pl.BlockSpec((mats.shape[0], b, b), lambda i: (0, 0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((bm, n), lambda i: (i, 0)),
-            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((mp, n), jnp.int8),
-            jax.ShapeDtypeStruct((mp, 1), jnp.float32),
-        ],
-        interpret=interpret,
-    )(x2, mats.astype(jnp.float32))
-    if pad:
-        q, s = q[:m], s[:m]
-    return q.reshape(orig_shape), s.reshape(orig_shape[:-1] + (1,))
+__all__ = ["fused_hadamard_quantize", "ref_fused"]
 
 
 def fused_hadamard_quantize(
@@ -84,24 +37,37 @@ def fused_hadamard_quantize(
     *,
     block_m: Optional[int] = None,
     interpret: Optional[bool] = None,
+    mode: str = "int8",
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Rotate the last axis by the Walsh-Hadamard transform and int8-quantize
-    per row, in one VMEM-resident kernel. Returns (int8 values, f32 scales)."""
+    """Rotate the last axis by the Walsh-Hadamard transform and quantize
+    per row, in one VMEM-resident kernel. Returns (quantized values, f32
+    scales). Deprecated: use ``repro.core.api.hadamard`` with a
+    ``QuantEpilogue`` (which this wrapper now calls)."""
     n = x.shape[-1]
     if n > MAX_KERNEL_SIZE:
         raise ValueError(f"fused kernel supports n <= {MAX_KERNEL_SIZE}, got {n}")
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    return _fused_call(x, "ortho" if scale == "ortho" else "none",
-                       block_m, interpret)
+    if not is_pow2(n):
+        raise ValueError(f"Hadamard size must be a power of 2, got {n}")
+    return hadamard(
+        x,
+        scale=scale,
+        backend="pallas",
+        epilogue=QuantEpilogue(mode),
+        block_m=block_m,
+        interpret=interpret,
+    )
 
 
-def ref_fused(x: jnp.ndarray, scale: Optional[str] = "ortho"):
-    """Pure-jnp oracle: scalar FWHT then per-row int8 quantization."""
+def ref_fused(x: jnp.ndarray, scale: Optional[str] = "ortho",
+              mode: str = "int8"):
+    """Pure-jnp oracle: scalar FWHT then per-row symmetric quantization.
+
+    ``mode`` selects the grid (int8 round+clip, or a cast through the real
+    fp8 dtype) -- the ground truth the fused kernel's epilogues are
+    validated against for all three modes."""
     from repro.kernels.ref import fwht
+
     n = x.shape[-1]
-    y = fwht(x.astype(jnp.float32),
-             1.0 / math.sqrt(n) if scale == "ortho" else None)
-    s = jnp.maximum(jnp.max(jnp.abs(y), axis=-1, keepdims=True), 1e-8) / _INT8_MAX
-    q = jnp.clip(jnp.round(y / s), -_INT8_MAX, _INT8_MAX).astype(jnp.int8)
-    return q, s
+    y = fwht(x.astype(jnp.float32), resolve_scale(scale, n))
+    q, s = _quantize_rows(y, mode)
+    return q.astype(QSPECS[mode][1]), s

@@ -21,97 +21,28 @@ Paper mapping (DESIGN.md section 2):
 Like the paper's kernel (and the Dao-AILab kernel it beats), a single
 kernel invocation supports transform sizes up to 2^15 = 32768; the wrapper
 falls back to the pure-JAX factored path above that.
+
+The kernel bodies and their grid/BlockSpec wrappers now live in
+``repro.kernels.registry`` (the ``pallas`` backend of the plan-based API);
+``hadacore`` remains the direct, rotation-only entry point for callers
+that want the kernel specifically (benchmarks, kernel tests).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
-from repro.core.hadamard import MXU_TILE, _apply_passes, base_matrices
+from repro.core.api import plan_for
+from repro.kernels.ref import is_pow2
+from repro.kernels.registry import (  # noqa: F401  (re-exported: legacy API)
+    MAX_KERNEL_SIZE,
+    _pallas_transform,
+    default_block_m,
+)
 
 __all__ = ["hadacore", "MAX_KERNEL_SIZE", "default_block_m"]
-
-# Same per-invocation cap as the paper's kernel (2^15). Above this the
-# (block_m, n) row tile would still fit VMEM only for tiny block_m.
-MAX_KERNEL_SIZE = 32768
-
-# VMEM budget we tile for (v5e has 16 MiB more or less reserved for Pallas).
-_VMEM_BUDGET_BYTES = 8 * 1024 * 1024
-
-
-def default_block_m(n: int, m: int, dtype=jnp.float32) -> int:
-    """Rows per grid step. Plays the role of the paper's empirically chosen
-    warps_per_block x num_chunks: large enough to keep the MXU busy
-    (>=128-row matmuls when possible), small enough that x + out + f32
-    scratch fit the VMEM budget."""
-    bytes_per_row = n * (jnp.dtype(dtype).itemsize + 4)  # io tile + f32 compute copy
-    bm = max(8, _VMEM_BUDGET_BYTES // max(bytes_per_row, 1))
-    bm = min(bm, 256, m)
-    # round down to a multiple of 8 (f32 sublane); keep at least 8
-    return max(8, (bm // 8) * 8)
-
-
-def _hadacore_kernel(x_ref, mats_ref, o_ref, *, n: int):
-    """One grid step: transform a (block_m, n) row block entirely in VMEM."""
-    x = x_ref[...].astype(jnp.float32)
-    bm = x.shape[0]
-    mats = [mats_ref[p] for p in range(mats_ref.shape[0])]
-    y = _apply_passes(x.reshape(bm, n), n, mats)
-    o_ref[...] = y.reshape(x_ref.shape).astype(o_ref.dtype)
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=("scale_mode", "block_m", "interpret", "in_place"),
-)
-def _hadacore_call(
-    x: jnp.ndarray,
-    scale_mode: str,
-    block_m: Optional[int],
-    interpret: bool,
-    in_place: bool,
-) -> jnp.ndarray:
-    import math
-
-    n = x.shape[-1]
-    scale = 1.0 / math.sqrt(n) if scale_mode == "ortho" else None
-    mats = jnp.stack(base_matrices(n, scale))  # (P, b, b), b = min(n, 128)
-    b = mats.shape[-1]
-
-    orig_shape = x.shape
-    m = 1
-    for d in x.shape[:-1]:
-        m *= d
-    x2 = x.reshape(m, n)
-
-    bm = block_m or default_block_m(n, m, x.dtype)
-    pad = (-m) % bm
-    if pad:
-        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
-    mp = x2.shape[0]
-
-    grid = (mp // bm,)
-    kernel = functools.partial(_hadacore_kernel, n=n)
-    out = pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, n), lambda i: (i, 0)),
-            pl.BlockSpec((mats.shape[0], b, b), lambda i: (0, 0, 0)),
-        ],
-        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((mp, n), x.dtype),
-        input_output_aliases={0: 0} if in_place else {},
-        interpret=interpret,
-    )(x2, mats.astype(jnp.float32))
-
-    if pad:
-        out = out[:m]
-    return out.reshape(orig_shape)
 
 
 def hadacore(
@@ -138,8 +69,11 @@ def hadacore(
             f"hadacore kernel supports n <= {MAX_KERNEL_SIZE} (paper cap); "
             f"got {n}. Use repro.core.hadamard.hadamard_transform."
         )
+    if not is_pow2(n):
+        raise ValueError(f"Hadamard size must be a power of 2, got {n}")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    return _hadacore_call(
-        x, "ortho" if scale == "ortho" else "none", block_m, interpret, in_place
+    plan = plan_for(
+        n, dtype=x.dtype, scale=scale, backend="pallas", block_m=block_m
     )
+    return _pallas_transform(x, plan, interpret, in_place)

@@ -1,51 +1,38 @@
-"""Public jit'd Hadamard-transform op with autodiff and backend dispatch.
+"""DEPRECATED shim: the jit'd Hadamard op with autodiff and dispatch.
 
-``hadamard`` is the single entry point models use. It dispatches:
+``kernels.ops.hadamard`` predates the plan-based API and is kept only for
+backward compatibility -- it is now a thin wrapper over
+``repro.core.api.hadamard`` (which carries the same ``custom_vjp``
+self-adjoint pullback and the same pallas-with-XLA-fallback dispatch,
+via the backend registry instead of an if/else chain). New code should
+use::
 
-  * n <= 32768 (paper's kernel cap)  ->  Pallas hadacore kernel
-    (interpret mode off-TPU, compiled Mosaic on TPU)
-  * larger n, or ``backend="xla"``   ->  pure-JAX MXU-factored path
+    from repro.core.api import hadamard, plan_for
 
-and carries a ``custom_vjp``: the Walsh-Hadamard matrix is symmetric, so
-the pullback of ``y = x @ (s H)`` is ``g @ (s H)`` -- the transform is its
-own adjoint, which keeps rotation layers cheap in the backward pass (one
-more hadacore call instead of a transposed matmul).
+and optionally prebuild a plan for the hot path.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
-from repro.core.hadamard import hadamard_transform
-from repro.kernels.hadacore import MAX_KERNEL_SIZE, hadacore
+from repro.core.api import hadamard as _hadamard
+from repro.kernels.ref import is_pow2
 
 __all__ = ["hadamard"]
 
 
-def _fwd_impl(x: jnp.ndarray, scale: Optional[str], backend: str) -> jnp.ndarray:
-    n = x.shape[-1]
-    if backend == "pallas" and n <= MAX_KERNEL_SIZE:
-        return hadacore(x, scale=scale)
-    return hadamard_transform(x, scale=scale)
-
-
-@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
 def hadamard(x: jnp.ndarray, scale: Optional[str] = "ortho",
              backend: str = "pallas") -> jnp.ndarray:
-    """Differentiable right Hadamard transform of the last axis."""
-    return _fwd_impl(x, scale, backend)
+    """Differentiable right Hadamard transform of the last axis.
 
-
-def _hadamard_fwd(x, scale, backend):
-    return _fwd_impl(x, scale, backend), None
-
-
-def _hadamard_bwd(scale, backend, _res, g):
-    # H^T = H and the scale is scalar: the op is self-adjoint.
-    return (_fwd_impl(g, scale, backend),)
-
-
-hadamard.defvjp(_hadamard_fwd, _hadamard_bwd)
+    Deprecated: use ``repro.core.api.hadamard``. Dispatch is unchanged --
+    ``backend="pallas"`` uses the hadacore kernel up to the paper's 2^15
+    cap and falls back to the MXU-factored XLA path above it. Non-power-
+    of-2 sizes are rejected as before (the plan API's grouped transform
+    is an explicit opt-in, not a silent substitute).
+    """
+    if not is_pow2(x.shape[-1]):
+        raise ValueError(f"Hadamard size must be a power of 2, got {x.shape[-1]}")
+    return _hadamard(x, scale=scale, backend=backend)

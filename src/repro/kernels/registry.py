@@ -1,0 +1,381 @@
+"""Backend registry for the plan-based Hadamard API (DESIGN.md section 5).
+
+Every transform implementation is a *backend* registered here via the
+``@register_backend`` decorator -- replacing the if/else string chains the
+old entry points (``kernels.ops.hadamard``, ``core.rotations.
+online_hadamard``) each carried their own copy of. A backend exposes:
+
+  * ``transform(x, plan, interpret)``  -- rotate the last axis (== plan.p)
+  * ``fused(x, plan, interpret)``      -- rotate + quantize epilogue in one
+    kernel, returning ``(q, scales)``; ``None`` when the backend has no
+    fused path (the dispatcher falls back to transform + XLA epilogue)
+  * ``fused_dequant(x, plan, interpret)`` -- rotate + fake-quantize
+    (quantize-dequantize) in one kernel; the training-path variant
+  * ``supports(p)``   -- can this backend run a p-point transform?
+
+Selection (``select_backend``): an explicit request wins when supported
+(with the historical pallas -> xla fallback above the kernel size cap);
+otherwise the ``REPRO_HADAMARD_BACKEND`` environment variable; otherwise
+the highest-priority auto-selectable backend that supports the size on
+this platform.  Registered backends:
+
+  pallas -- the HadaCore Pallas TPU kernels (VMEM-resident multi-pass
+            matmul; interpret mode off-TPU). Hosts the fused
+            rotate+quantize kernel: the rotated row block is already in
+            VMEM, so the per-token absmax and int8/fp8 cast happen before
+            write-back and the quantized tensor is the only HBM output.
+  xla    -- the MXU-factored pure-JAX path (shards trivially under pjit;
+            no size cap).
+  ref    -- the paper's Listing-1 scalar FWHT oracle (never auto-picked).
+"""
+from __future__ import annotations
+
+import collections
+import functools
+import os
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.hadamard import MXU_TILE, _apply_passes
+from repro.kernels.ref import fwht
+
+__all__ = [
+    "Backend",
+    "register_backend",
+    "get_backend",
+    "available_backends",
+    "select_backend",
+    "BACKEND_ENV_VAR",
+    "MAX_KERNEL_SIZE",
+    "default_block_m",
+    "QSPECS",
+    "TRACE_COUNTS",
+]
+
+BACKEND_ENV_VAR = "REPRO_HADAMARD_BACKEND"
+
+# Same per-invocation cap as the paper's kernel (2^15). Above this the
+# (block_m, n) row tile would still fit VMEM only for tiny block_m.
+MAX_KERNEL_SIZE = 32768
+
+# VMEM budget we tile for (v5e has 16 MiB more or less reserved for Pallas).
+_VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+# mode -> (grid max, storage dtype, integer grid?). The fused kernel and
+# the XLA epilogue fallback share this table so all paths agree bit-for-bit.
+QSPECS = {
+    "int8": (127.0, jnp.int8, True),
+    "fp8_e4m3": (448.0, jnp.float8_e4m3fn, False),
+    "fp8_e5m2": (57344.0, jnp.float8_e5m2, False),
+}
+
+# (backend, kind) -> number of times the jitted implementation was TRACED
+# (i.e. compiled). Plan-cache tests assert repeated same-shape calls do not
+# grow these counters.
+TRACE_COUNTS: collections.Counter = collections.Counter()
+
+
+def default_block_m(n: int, m: int, dtype=jnp.float32) -> int:
+    """Rows per grid step. Plays the role of the paper's empirically chosen
+    warps_per_block x num_chunks: large enough to keep the MXU busy
+    (>=128-row matmuls when possible), small enough that x + out + f32
+    scratch fit the VMEM budget."""
+    bytes_per_row = n * (jnp.dtype(dtype).itemsize + 4)  # io tile + f32 compute copy
+    bm = max(8, _VMEM_BUDGET_BYTES // max(bytes_per_row, 1))
+    bm = min(bm, 256, m)
+    # round down to a multiple of 8 (f32 sublane); keep at least 8
+    return max(8, (bm // 8) * 8)
+
+
+# ---------------------------------------------------------------- registry
+_REGISTRY: Dict[str, "Backend"] = {}
+
+
+def register_backend(cls):
+    """Class decorator: instantiate and register a backend under its name."""
+    inst = cls()
+    _REGISTRY[inst.name] = inst
+    return cls
+
+
+def get_backend(name: str) -> "Backend":
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown Hadamard backend {name!r}; registered: "
+            f"{sorted(_REGISTRY)}"
+        ) from None
+
+
+def available_backends() -> Tuple[str, ...]:
+    """Registered backend names, highest selection priority first."""
+    return tuple(sorted(_REGISTRY, key=lambda k: -_REGISTRY[k].priority))
+
+
+def select_backend(p: int, requested: Optional[str] = None) -> str:
+    """Resolve the backend for a p-point transform.
+
+    Explicit request > ``REPRO_HADAMARD_BACKEND`` env var > auto (priority
+    order over backends whose ``supports(p)`` holds). A requested backend
+    that cannot run the size falls through to auto selection -- preserving
+    the historical ``hadamard(x, backend="pallas")`` -> XLA fallback for
+    n above the kernel cap.
+    """
+    if requested in (None, "auto"):
+        requested = os.environ.get(BACKEND_ENV_VAR) or None
+    if requested is not None:
+        be = get_backend(requested)  # raises on unknown names
+        if be.supports(p):
+            return be.name
+    for name in available_backends():
+        be = _REGISTRY[name]
+        if be.auto and be.supports(p):
+            return name
+    raise ValueError(f"no registered backend supports a {p}-point transform")
+
+
+class Backend:
+    """Base class: a named transform implementation with optional fused
+    rotate+quantize paths. Subclasses are registered via
+    ``@register_backend`` and selected by ``select_backend``."""
+
+    name: str = "?"
+    priority: int = 0
+    auto: bool = True  # eligible for automatic selection
+
+    def supports(self, p: int) -> bool:
+        raise NotImplementedError
+
+    def transform(self, x, plan, interpret: bool):
+        raise NotImplementedError
+
+    # Optional single-kernel epilogue paths (None = dispatcher falls back
+    # to transform + XLA epilogue).
+    fused = None
+    fused_dequant = None
+
+
+# ---------------------------------------------------------------- kernels
+def _hadacore_kernel(x_ref, mats_ref, o_ref, *, n: int):
+    """One grid step: transform a (block_m, n) row block entirely in VMEM."""
+    x = x_ref[...].astype(jnp.float32)
+    bm = x.shape[0]
+    mats = [mats_ref[p] for p in range(mats_ref.shape[0])]
+    y = _apply_passes(x.reshape(bm, n), n, mats)
+    o_ref[...] = y.reshape(x_ref.shape).astype(o_ref.dtype)
+
+
+def _quantize_rows(y: jnp.ndarray, mode: str, axis=-1):
+    """THE symmetric-absmax epilogue math: (q on the mode's grid, f32
+    scales). Single source of truth -- the fused kernels, the XLA
+    epilogue fallback (``core.api``), and the oracle (``ref_fused``) all
+    call this so their numerics agree bit-for-bit.
+
+    ``q`` is returned pre-cast (f32 values on the integer grid for int8;
+    unconverted quotients for fp8) so callers control the final cast --
+    the fused kernel casts at the VMEM->HBM store, the dequant variant
+    round-trips through the storage dtype first. ``axis=None`` gives one
+    per-tensor scale (never fusable: needs a global reduction).
+    """
+    qmax, _, is_int = QSPECS[mode]
+    s = jnp.maximum(jnp.max(jnp.abs(y), axis=axis, keepdims=True), 1e-8) / qmax
+    q = y / s
+    if is_int:
+        q = jnp.clip(jnp.round(q), -qmax, qmax)
+    return q, s
+
+
+def _dequantize(q: jnp.ndarray, s: jnp.ndarray, mode: str) -> jnp.ndarray:
+    """Map ``_quantize_rows`` output back to real values through the
+    storage grid (fp8 round-trips through the real dtype so mantissa
+    truncation is reproduced exactly). f32 in, f32 out -- the other half
+    of the single-source-of-truth epilogue math."""
+    _, qdt, is_int = QSPECS[mode]
+    if not is_int:
+        q = q.astype(qdt).astype(jnp.float32)
+    return q * s
+
+
+def _fused_kernel(x_ref, mats_ref, q_ref, s_ref, *, n: int, mode: str):
+    """Rotate a row block and quantize it before write-back: the quantized
+    tensor plus scales are the only HBM outputs (paper's future-work
+    fusion, generalized from int8 to fp8_e4m3 / fp8_e5m2)."""
+    x = x_ref[...].astype(jnp.float32)
+    bm = x.shape[0]
+    mats = [mats_ref[p] for p in range(mats_ref.shape[0])]
+    y = _apply_passes(x.reshape(bm, n), n, mats)
+    q, s = _quantize_rows(y, mode)
+    q_ref[...] = q.astype(q_ref.dtype)
+    s_ref[...] = s
+
+
+def _fused_dequant_kernel(x_ref, mats_ref, o_ref, *, n: int, mode: str):
+    """Rotate + quantize-dequantize (fake quant) in one VMEM-resident pass:
+    the training-path twin of ``_fused_kernel``. Reproduces
+    ``core.quant.quantize`` numerics exactly, including the fp8 cast
+    round-trip through the real storage dtype."""
+    x = x_ref[...].astype(jnp.float32)
+    bm = x.shape[0]
+    mats = [mats_ref[p] for p in range(mats_ref.shape[0])]
+    y = _apply_passes(x.reshape(bm, n), n, mats)
+    q, s = _quantize_rows(y, mode)
+    o_ref[...] = _dequantize(q, s, mode).reshape(x_ref.shape).astype(o_ref.dtype)
+
+
+def _rows(x: jnp.ndarray, n: int):
+    m = 1
+    for d in x.shape[:-1]:
+        m *= d
+    return x.reshape(m, n), m
+
+
+def _pad_rows(x2: jnp.ndarray, bm: int):
+    pad = (-x2.shape[0]) % bm
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    return x2, pad
+
+
+def _plan_mats(plan) -> jnp.ndarray:
+    return jnp.asarray(plan.mats, dtype=jnp.float32)  # (P, b, b)
+
+
+# ----------------------------------------------------------------- pallas
+def _pallas_rows_call(x, plan, interpret: bool, kernel, out_kinds,
+                      in_place: bool = False):
+    """Shared grid plumbing for every row-tiled kernel: flatten to rows,
+    pad to the block_m tile, launch over the row grid, unpad, restore the
+    leading shape. ``out_kinds`` is a sequence of ``("tile", dtype)``
+    (a (block_m, n) output) or ``("rowscale", f32)`` (a (block_m, 1)
+    per-row output, reshaped to ``(..., 1)``)."""
+    n = plan.p
+    mats = _plan_mats(plan)
+    b = mats.shape[-1]
+    orig_shape = x.shape
+    x2, m = _rows(x, n)
+    bm = plan.block_m or default_block_m(n, m, x.dtype)
+    x2, pad = _pad_rows(x2, bm)
+    mp = x2.shape[0]
+    out_specs, out_shape = [], []
+    for kind, dt in out_kinds:
+        if kind == "tile":
+            out_specs.append(pl.BlockSpec((bm, n), lambda i: (i, 0)))
+            out_shape.append(jax.ShapeDtypeStruct((mp, n), dt))
+        else:
+            out_specs.append(pl.BlockSpec((bm, 1), lambda i: (i, 0)))
+            out_shape.append(jax.ShapeDtypeStruct((mp, 1), dt))
+    single = len(out_kinds) == 1
+    res = pl.pallas_call(
+        kernel,
+        grid=(mp // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((mats.shape[0], b, b), lambda i: (0, 0, 0)),
+        ],
+        out_specs=out_specs[0] if single else out_specs,
+        out_shape=out_shape[0] if single else out_shape,
+        input_output_aliases={0: 0} if in_place else {},
+        interpret=interpret,
+    )(x2, mats)
+    outs = (res,) if single else tuple(res)
+    if pad:
+        outs = tuple(o[:m] for o in outs)
+    outs = tuple(
+        o.reshape(orig_shape) if kind == "tile"
+        else o.reshape(orig_shape[:-1] + (1,))
+        for o, (kind, _) in zip(outs, out_kinds)
+    )
+    return outs[0] if single else outs
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "interpret", "in_place"))
+def _pallas_transform(x, plan, interpret: bool, in_place: bool = False):
+    TRACE_COUNTS[("pallas", "transform")] += 1
+    kernel = functools.partial(_hadacore_kernel, n=plan.p)
+    return _pallas_rows_call(x, plan, interpret, kernel,
+                             [("tile", x.dtype)], in_place)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "interpret"))
+def _pallas_fused(x, plan, interpret: bool):
+    TRACE_COUNTS[("pallas", "fused")] += 1
+    mode = plan.epilogue.mode
+    kernel = functools.partial(_fused_kernel, n=plan.p, mode=mode)
+    return _pallas_rows_call(
+        x, plan, interpret, kernel,
+        [("tile", QSPECS[mode][1]), ("rowscale", jnp.float32)])
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "interpret"))
+def _pallas_fused_dequant(x, plan, interpret: bool):
+    TRACE_COUNTS[("pallas", "fused_dequant")] += 1
+    kernel = functools.partial(
+        _fused_dequant_kernel, n=plan.p, mode=plan.epilogue.mode)
+    return _pallas_rows_call(x, plan, interpret, kernel, [("tile", x.dtype)])
+
+
+@register_backend
+class PallasBackend(Backend):
+    name = "pallas"
+    priority = 20
+
+    def supports(self, p: int) -> bool:
+        return p <= MAX_KERNEL_SIZE
+
+    def transform(self, x, plan, interpret, in_place: bool = False):
+        return _pallas_transform(x, plan, interpret, in_place)
+
+    def fused(self, x, plan, interpret):
+        return _pallas_fused(x, plan, interpret)
+
+    def fused_dequant(self, x, plan, interpret):
+        return _pallas_fused_dequant(x, plan, interpret)
+
+
+# -------------------------------------------------------------------- xla
+@functools.partial(jax.jit, static_argnames=("plan",))
+def _xla_transform(x, plan):
+    TRACE_COUNTS[("xla", "transform")] += 1
+    n = plan.p
+    mats = [jnp.asarray(m) for m in plan.mats]
+    orig_shape, orig_dtype = x.shape, x.dtype
+    x2, _ = _rows(x.astype(jnp.float32), n)
+    y = _apply_passes(x2, n, mats)
+    return y.reshape(orig_shape).astype(orig_dtype)
+
+
+@register_backend
+class XlaBackend(Backend):
+    name = "xla"
+    priority = 10
+
+    def supports(self, p: int) -> bool:
+        return True
+
+    def transform(self, x, plan, interpret):
+        return _xla_transform(x, plan)
+
+
+# -------------------------------------------------------------------- ref
+@functools.partial(jax.jit, static_argnames=("plan",))
+def _ref_transform(x, plan):
+    TRACE_COUNTS[("ref", "transform")] += 1
+    y = fwht(x.astype(jnp.float32), plan.scale)
+    return y.astype(x.dtype)
+
+
+@register_backend
+class RefBackend(Backend):
+    name = "ref"
+    priority = 0
+    auto = False  # oracle: explicit selection only
+
+    def supports(self, p: int) -> bool:
+        return True
+
+    def transform(self, x, plan, interpret):
+        return _ref_transform(x, plan)

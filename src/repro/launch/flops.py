@@ -23,7 +23,9 @@ from repro.models.config import ModelConfig
 def _param_sizes(cfg: ModelConfig) -> Dict[str, float]:
     from repro.launch.steps import param_shapes
     tree = param_shapes(cfg)
-    flat = jax.tree.flatten_with_path(tree)[0]
+    # jax.tree.flatten_with_path only exists in newer jax; tree_util's
+    # spelling works across the pinned range
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     total = emb = experts = 0.0
     for path, leaf in flat:
         sz = 1.0

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quant import kv_quantize, quantize
-from repro.core.rotations import online_hadamard
+from repro.core.rotations import online_hadamard, online_hadamard_quantize
 from repro.distributed.sharding import constrain
 from repro.models.common import apply_rope_angles, dense_init, mrope_angles, rope_freqs
 
@@ -78,8 +78,16 @@ def _project_qkv(cfg, p, x):
 
 
 def _rotate_quant_qk(cfg, q, k):
-    """Paper deployment point: per-head Hadamard then low-precision Q/K."""
+    """Paper deployment point: per-head Hadamard then low-precision Q/K.
+
+    When both rotation and KV quantization are on, each head's rotation +
+    per-token quantize run as ONE fused kernel (plan epilogue) instead of
+    two HBM round trips."""
     qc = cfg.quant
+    if qc.rotating and qc.enabled and qc.kv_quant:
+        q = online_hadamard_quantize(q, qc, per_token=True)
+        k = online_hadamard_quantize(k, qc, per_token=True)
+        return q, k
     if qc.rotating:
         q = online_hadamard(q, qc)
         k = online_hadamard(k, qc)
@@ -176,6 +184,10 @@ def cross_kv(cfg, p, enc_out: jnp.ndarray):
     k = k.reshape(B, T, KH, hd)
     v = v.reshape(B, T, KH, hd)
     qc = cfg.quant
+    if qc.rotating and qc.enabled and qc.kv_quant:
+        k = online_hadamard_quantize(k, qc, per_token=True)   # fused
+        v = quantize(v, qc.mode, axis=-1)
+        return k, v
     if qc.rotating:
         k = online_hadamard(k, qc)
     k, v = kv_quantize(k, v, qc)

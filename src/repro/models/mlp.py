@@ -15,8 +15,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.core.quant import quant_dot
-from repro.core.rotations import online_hadamard
+from repro.core.rotations import online_hadamard, online_hadamard_quantize, rotated_quant_dot
 from repro.distributed.sharding import constrain
 from repro.models.common import dense_init
 
@@ -49,9 +48,10 @@ def apply_mlp(cfg, p, x):
     h = _act(cfg, x @ p["w_gate"]) * (x @ p["w_up"]) if cfg.act == "swiglu" \
         else _act(cfg, x @ p["w_up"])
     h = constrain(h, "batch", "seq", "dff")
-    # ---- the paper's online rotation: Hadamard on the down_proj input ----
-    h = online_hadamard(h, qc)
-    y = quant_dot(h, p["w_down"], qc)
+    # ---- the paper's online rotation: Hadamard on the down_proj input,
+    # fused with the activation quantization in one kernel when the plan
+    # supports it (rotate="hadamard" + mode!="none" + backend="pallas") ----
+    y = rotated_quant_dot(h, p["w_down"], qc)
     return constrain(y, "batch", "seq", None)
 
 
@@ -115,12 +115,12 @@ def apply_moe(cfg, p, x):
     u = jnp.einsum("becd,edf->becf", xin, we["w_up"])
     h = _act(cfg, g) * u
     h = constrain(h, "moebatch", "experts", None, "dff")
-    h = online_hadamard(h, qc)                              # shared Hadamard
     if qc.enabled:
         from repro.core.quant import quantize
-        h = quantize(h, qc.mode, axis=-1 if qc.per_token else None)
+        h = online_hadamard_quantize(h, qc)                 # shared Hadamard, fused
         wd = quantize(we["w_down"], qc.mode, axis=1)
     else:
+        h = online_hadamard(h, qc)                          # shared Hadamard
         wd = we["w_down"]
     yout = jnp.einsum("becf,efd->becd", h, wd)
     y = jnp.einsum("bsec,becd->bsd", combine.astype(x.dtype), yout)

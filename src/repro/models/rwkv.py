@@ -20,8 +20,7 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.quant import quant_dot
-from repro.core.rotations import online_hadamard
+from repro.core.rotations import rotated_quant_dot
 from repro.distributed.sharding import constrain
 from repro.models.common import dense_init
 
@@ -237,9 +236,9 @@ def apply_rwkv_cmix(cfg, p, x, x_prev=None, *, return_state: bool = False):
     r = jax.nn.sigmoid(xr @ p["wr"])
     k = jnp.square(jax.nn.relu(xk @ p["wk"]))
     k = constrain(k, "batch", "seq", "dff")
-    # the paper's online rotation point (down-projection input)
-    k = online_hadamard(k, cfg.quant)
-    y = r * quant_dot(k, p["wv"], cfg.quant)
+    # the paper's online rotation point (down-projection input), fused
+    # with the activation quantization when the plan supports it
+    y = r * rotated_quant_dot(k, p["wv"], cfg.quant)
     y = constrain(y, "batch", "seq", None)
     if return_state:
         return y, x[:, -1, :]

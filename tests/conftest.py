@@ -3,6 +3,18 @@ import sys
 
 import pytest
 
+try:  # real hypothesis when available ...
+    import hypothesis  # noqa: F401
+except ImportError:  # ... deterministic fallback otherwise (see module doc)
+    import os
+
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from _hypothesis_stub import build_module
+
+    _mod = build_module()
+    sys.modules["hypothesis"] = _mod
+    sys.modules["hypothesis.strategies"] = _mod.strategies
+
 
 def run_py_subprocess(code: str, devices: int = 8, timeout: int = 600):
     """Run python code in a subprocess with N fake XLA host devices.
