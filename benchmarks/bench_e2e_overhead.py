@@ -31,7 +31,7 @@ def _time(fn, *args, iters=8):
     return (time.perf_counter() - t0) / iters * 1e3
 
 
-def run(csv: List[str], smoke: bool = False):
+def run(csv: List[str], smoke: bool = False, records=None):
     rng = np.random.default_rng(0)
     B, d = (64, 1024) if smoke else (512, 1024)
     for dff in (4096, 6912) if smoke else (4096, 6912, 14336):  # pow2, 27*256, 7*2048
@@ -54,4 +54,13 @@ def run(csv: List[str], smoke: bool = False):
                    f"with_fwht_ms={t1:.2f},with_dense_rot_ms={t2:.2f},"
                    f"fwht_overhead_pct={100*(t1-t0)/t0:.1f},"
                    f"dense_overhead_pct={100*(t2-t0)/t0:.1f}")
+        if records is not None:
+            byt = 4 * (B * d + d * dff + dff * d + B * dff + B * d)
+            for backend, ms in (("none", t0), ("fwht", t1), ("dense", t2)):
+                records.append({
+                    "bench": "e2e_rotation_overhead", "shape": f"{B}x{d}x{dff}",
+                    "dtype": "float32", "backend": backend,
+                    "ms": round(ms, 4),
+                    "gbps": round(byt / (ms * 1e-3) / 1e9, 3),
+                })
     return csv

@@ -46,7 +46,7 @@ def _hbm_bytes(rows: int, n: int, dtype_bytes: int = 2):
     return two_step, fused
 
 
-def run(csv: List[str], smoke: bool = False):
+def run(csv: List[str], smoke: bool = False, records=None):
     rng = np.random.default_rng(0)
     sizes = (2048,) if smoke else (2048, 4096)
     rows_model = 1 << (10 if smoke else 14)
@@ -77,4 +77,18 @@ def run(csv: List[str], smoke: bool = False):
                 f"traffic_reduction={bytes_two/bytes_fused:.2f}x,"
                 f"fused_ms={t_fused:.2f},two_step_ms={t_two:.2f},"
                 f"max_rel_err_vs_twostep={err:.2e}")
+            if records is not None:
+                # gbps from the bytes of the shape actually timed, not
+                # the rows_model analytic figures in the CSV
+                mb_two, mb_fused = _hbm_bytes(bench_rows, n, dtype_bytes=4)
+                shape = f"{bench_rows}x{n}"
+                for backend, ms, byt in (
+                        ("pallas_fused", t_fused, mb_fused),
+                        ("two_step", t_two, mb_two)):
+                    records.append({
+                        "bench": f"fused_quant_{mode}", "shape": shape,
+                        "dtype": "float32", "backend": backend,
+                        "ms": round(ms, 4),
+                        "gbps": round(byt / (ms * 1e-3) / 1e9, 3),
+                    })
     return csv

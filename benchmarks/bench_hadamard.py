@@ -53,7 +53,7 @@ def tpu_roofline_us(rows: int, n: int, dtype_bytes: int = 2) -> dict:
             "bound": "memory" if mem / HBM_BW > flops / PEAK_FLOPS else "compute"}
 
 
-def run(csv: List[str], smoke: bool = False):
+def run(csv: List[str], smoke: bool = False, records=None):
     sizes = [128, 1024] if smoke else SIZES
     elem_counts = [2**15] if smoke else ELEM_COUNTS
     dense_cache = {}
@@ -80,6 +80,15 @@ def run(csv: List[str], smoke: bool = False):
                 f"dense_us={t_dense:.1f},speedup_vs_scalar={t_scalar/t_fact:.2f},"
                 f"tpu_roofline_us={max(rf['t_mem_us'], rf['t_compute_us']):.2f},"
                 f"tpu_bound={rf['bound']}")
+            if records is not None:
+                byt = 2 * rows * n * 4  # one f32 read + one write
+                for backend, us in (("ref", t_scalar), ("xla", t_fact)):
+                    records.append({
+                        "bench": "hadamard", "shape": f"{rows}x{n}",
+                        "dtype": "float32", "backend": backend,
+                        "ms": round(us / 1e3, 4),
+                        "gbps": round(byt / (us * 1e-6) / 1e9, 3),
+                    })
 
     # Appendix C: dtype sweep at a representative size
     drows = 256 if smoke else 4096
@@ -91,6 +100,14 @@ def run(csv: List[str], smoke: bool = False):
         rf = tpu_roofline_us(drows, 2048, jnp.dtype(dt).itemsize)
         csv.append(f"hadamard_dtype,dtype={name},factored_us={t:.1f},"
                    f"tpu_roofline_us={max(rf['t_mem_us'], rf['t_compute_us']):.2f}")
+        if records is not None:
+            byt = 2 * drows * 2048 * jnp.dtype(dt).itemsize
+            records.append({
+                "bench": "hadamard_dtype", "shape": f"{drows}x2048",
+                "dtype": name, "backend": "xla",
+                "ms": round(t / 1e3, 4),
+                "gbps": round(byt / (t * 1e-6) / 1e9, 3),
+            })
 
     # Appendix B: in-place (buffer donation) vs out-of-place
     x = jnp.asarray(

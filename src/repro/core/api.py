@@ -4,7 +4,7 @@ This is the seam the whole repo routes rotations through (DESIGN.md
 section 5). Instead of four divergent entry points with string-typed
 knobs, callers build (or let us cache) a :class:`HadamardPlan` --
 everything shape-dependent is precomputed exactly once per
-``(n, dtype, backend, epilogue, scale, block_m)`` key:
+``(n, dtype, compute_dtype, backend, epilogue, scale, block_m)`` key:
 
   * the 128-factorization ``n = 128^k * r`` and the stacked per-pass base
     matrices (including the I (x) H_r diagonal tiling for r > 1 and the
@@ -55,6 +55,7 @@ from repro.core.hadamard import (
     base_matrices_np,
     factorize,
     largest_pow2_divisor,
+    resolve_compute_dtype,
     resolve_scale,
 )
 from repro.kernels import registry
@@ -67,6 +68,7 @@ __all__ = [
     "plan_for",
     "make_plan",
     "hadamard",
+    "quant_dot",
     "plan_cache_info",
 ]
 
@@ -107,6 +109,9 @@ class HadamardPlan:
     n: int                           # full last-axis size
     p: int                           # per-group pow2 transform size (== n when pow2)
     dtype: str                       # canonical input/output dtype name
+    compute_dtype: str               # dtype the matmul passes run in (f32
+                                     # accumulation always; see
+                                     # hadamard.resolve_compute_dtype)
     backend: str                     # resolved registry backend name
     scale: Optional[float]           # numeric scale folded into pass 0 (None = +-1)
     epilogue: Optional[QuantEpilogue]
@@ -125,15 +130,17 @@ class HadamardPlan:
 
 
 @functools.lru_cache(maxsize=None)
-def _build_plan(n, p, dtype_name, scale_val, backend, epilogue, block_m):
+def _build_plan(n, p, dtype_name, compute_dtype, scale_val, backend, epilogue,
+                block_m):
     if p == 1:
         k, r, mats = 0, 1, np.ones((1, 1, 1), np.float32)
     else:
         k, r = factorize(p)
         mats = np.stack(base_matrices_np(p, scale_val))
     return HadamardPlan(
-        n=n, p=p, dtype=dtype_name, backend=backend, scale=scale_val,
-        epilogue=epilogue, block_m=block_m, k=k, r=r, mats=mats,
+        n=n, p=p, dtype=dtype_name, compute_dtype=compute_dtype,
+        backend=backend, scale=scale_val, epilogue=epilogue, block_m=block_m,
+        k=k, r=r, mats=mats,
     )
 
 
@@ -145,14 +152,18 @@ def plan_for(
     backend: Optional[str] = None,
     epilogue: Optional[QuantEpilogue] = None,
     block_m: Optional[int] = None,
+    compute_dtype: Any = None,
 ) -> HadamardPlan:
     """Build (or fetch from the cache) the plan for an n-point transform.
 
     ``backend=None`` resolves via the registry: ``REPRO_HADAMARD_BACKEND``
     env override first, then auto-selection by size/platform. Non-power-
     of-2 ``n`` plans the grouped transform on the largest power-of-2
-    divisor. Repeated calls with the same key return the *same* plan
-    object, so downstream jit caches hit.
+    divisor. ``compute_dtype=None`` resolves the dtype the matmul passes
+    run in: native bf16/fp16 passes with f32 MXU accumulation for 16-bit
+    inputs, f32 otherwise (explicitly overridable). Repeated calls with
+    the same key return the *same* plan object, so downstream jit caches
+    hit.
     """
     if n < 1:
         raise ValueError(f"Hadamard size must be >= 1, got {n}")
@@ -160,7 +171,9 @@ def plan_for(
     scale_val = resolve_scale(scale, p)
     resolved = select_backend(p, backend)
     return _build_plan(
-        n, p, jnp.dtype(dtype).name, scale_val, resolved, epilogue, block_m
+        n, p, jnp.dtype(dtype).name,
+        resolve_compute_dtype(dtype, compute_dtype), scale_val, resolved,
+        epilogue, block_m
     )
 
 
@@ -178,7 +191,8 @@ def _strip(plan: HadamardPlan) -> HadamardPlan:
     if plan.epilogue is None:
         return plan
     return _build_plan(
-        plan.n, plan.p, plan.dtype, plan.scale, plan.backend, None, plan.block_m
+        plan.n, plan.p, plan.dtype, plan.compute_dtype, plan.scale,
+        plan.backend, None, plan.block_m
     )
 
 
@@ -310,6 +324,7 @@ def hadamard(
     backend: Optional[str] = _UNSET,
     epilogue: Optional[QuantEpilogue] = _UNSET,
     block_m: Optional[int] = _UNSET,
+    compute_dtype: Any = _UNSET,
     interpret: Optional[bool] = None,
 ) -> Union[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
     """Walsh-Hadamard transform of the last axis -- THE entry point.
@@ -334,11 +349,14 @@ def hadamard(
             backend=None if backend is _UNSET else backend,
             epilogue=None if epilogue is _UNSET else epilogue,
             block_m=None if block_m is _UNSET else block_m,
+            compute_dtype=None if compute_dtype is _UNSET else compute_dtype,
         )
     else:
         passed = [name for name, v in (("scale", scale), ("backend", backend),
                                        ("epilogue", epilogue),
-                                       ("block_m", block_m)) if v is not _UNSET]
+                                       ("block_m", block_m),
+                                       ("compute_dtype", compute_dtype))
+                  if v is not _UNSET]
         if passed:
             raise ValueError(
                 f"hadamard() got both an explicit plan and {passed}; plan "
@@ -360,3 +378,206 @@ def hadamard(
     if plan.epilogue.dequant:
         return _fused_dequant(x, plan, interpret)
     return _fused(x, plan, interpret)
+
+
+# ------------------------------------------------- fused quantized GEMM
+def _qd_fusable(plan: HadamardPlan) -> bool:
+    """Can the rotate+quantize+dot run as the backend's single kernel?
+    Mirrors ``_fusable`` plus the backend must host a ``quant_dot`` and
+    the minimal (p, 128) weight tile must fit the kernel's VMEM budget
+    (fp8 operands cost 3 bytes/element in VMEM: storage + the exact bf16
+    embedding; oversize plans take the unfused fallback instead of
+    launching an over-budget kernel)."""
+    from repro.kernels.quant_dot import _FP8_OPERAND_BYTES
+
+    be = get_backend(plan.backend)
+    wb = 1 if QSPECS[plan.epilogue.mode][2] else _FP8_OPERAND_BYTES
+    return (
+        not plan.grouped
+        and plan.p > 1
+        and plan.epilogue.per_token
+        and getattr(be, "quant_dot", None) is not None
+        and be.supports(plan.p)
+        and plan.p * 128 * wb <= registry._VMEM_BUDGET_BYTES
+    )
+
+
+def _dispatch_quant_dot(x, wq, sw, plan: HadamardPlan, interpret: bool):
+    """rotate(x) -> per-token quantize -> contract against the offline-
+    quantized weight (int8 w/ int32 accumulation, fp8 w/ f32), applying
+    ``scale_x * scale_w`` in the epilogue. Fused single-kernel when the
+    plan supports it; otherwise the unfused oracle semantics (grouped
+    transforms, per-tensor scales, backends without the kernel -- the
+    pjit-shardable fallback)."""
+    if _qd_fusable(plan):
+        return get_backend(plan.backend).quant_dot(x, wq, sw, plan, interpret)
+    from repro.kernels.quant_dot import epilogue_dot
+
+    y = _dispatch_transform(x, _strip(plan), interpret)
+    epi = plan.epilogue
+    q, s = registry._quantize_rows(
+        y.astype(jnp.float32), epi.mode, axis=-1 if epi.per_token else None)
+    return epilogue_dot(q, s, wq, sw, epi.mode, jnp.dtype(plan.dtype))
+
+
+def _dequant_weight(wq, sw):
+    return wq.astype(jnp.float32) * sw
+
+
+def _zero_cotangent(a):
+    if jnp.issubdtype(a.dtype, jnp.integer):
+        return np.zeros(a.shape, dtype=float0)
+    return jnp.zeros(a.shape, a.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _quant_dot_qw(x, wq, sw, plan: HadamardPlan, interpret: bool):
+    """Serving form: weights pre-quantized offline. Differentiable in x
+    only (STE through the activation quantization); the quantized weight
+    and its scales are statistics with zero pullback."""
+    return _dispatch_quant_dot(x, wq, sw, plan, interpret)
+
+
+def _quant_dot_qw_fwd(x, wq, sw, plan, interpret):
+    return _dispatch_quant_dot(x, wq, sw, plan, interpret), (wq, sw)
+
+
+def _quant_dot_qw_bwd(plan, interpret, res, g):
+    # STE: out ~= had(x) @ W with W = dequant(wq, sw), so the x-pullback is
+    # the (self-adjoint) rotation of g @ W^T.
+    wq, sw = res
+    W = _dequant_weight(wq, sw)
+    gy = jnp.matmul(g.astype(jnp.float32), W.T,
+                    preferred_element_type=jnp.float32)
+    gx = _dispatch_transform(
+        gy.astype(jnp.dtype(plan.dtype)), _strip(plan), interpret)
+    return gx, _zero_cotangent(wq), _zero_cotangent(sw)
+
+
+_quant_dot_qw.defvjp(_quant_dot_qw_fwd, _quant_dot_qw_bwd)
+
+
+def _quant_dot_w_impl(x, w, plan: HadamardPlan, interpret: bool):
+    from repro.core.wquant import quantize_weight
+
+    wq, sw = quantize_weight(w, plan.epilogue.mode)
+    return _dispatch_quant_dot(x, wq, sw, plan, interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _quant_dot_w(x, w, plan: HadamardPlan, interpret: bool):
+    """Training form: full-precision weight, quantized per out-channel on
+    the fly. STE through BOTH quantizations: out ~= had(x) @ w in the
+    backward pass, so both gradients flow (w's raw fake-quant grad would
+    be zero a.e. -- see the module docstring)."""
+    return _quant_dot_w_impl(x, w, plan, interpret)
+
+
+def _quant_dot_w_fwd(x, w, plan, interpret):
+    return _quant_dot_w_impl(x, w, plan, interpret), (x, w)
+
+
+def _quant_dot_w_bwd(plan, interpret, res, g):
+    x, w = res
+    gf = g.astype(jnp.float32)
+    gy = jnp.matmul(gf, w.astype(jnp.float32).T,
+                    preferred_element_type=jnp.float32)
+    gx = _dispatch_transform(
+        gy.astype(jnp.dtype(plan.dtype)), _strip(plan), interpret)
+    y = _dispatch_transform(x, _strip(plan), interpret)
+    yf = y.reshape(-1, y.shape[-1]).astype(jnp.float32)
+    gw = jnp.matmul(yf.T, gf.reshape(-1, gf.shape[-1]),
+                    preferred_element_type=jnp.float32)
+    return gx, gw.astype(w.dtype)
+
+
+_quant_dot_w.defvjp(_quant_dot_w_fwd, _quant_dot_w_bwd)
+
+
+def quant_dot(
+    x: jnp.ndarray,
+    w: Union[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]],
+    plan: Optional[HadamardPlan] = None,
+    *,
+    mode: str = _UNSET,
+    scale: Union[str, float, None] = _UNSET,
+    backend: Optional[str] = _UNSET,
+    block_m: Optional[int] = _UNSET,
+    compute_dtype: Any = _UNSET,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """``quantize(hadamard(x)) @ quantize(w)`` as ONE fused consumer path.
+
+    The quantized hot path end to end: the row block is rotated, per-token
+    quantized, and immediately contracted against the offline-quantized
+    weight tile inside the same kernel (int8 operands with int32 MXU
+    accumulation; fp8 operands multiplied exactly in bf16 with f32
+    accumulation), with ``scale_x * scale_w`` applied in the epilogue --
+    the rotated/quantized activations never round-trip through HBM.
+
+    ``w`` is either the full-precision weight ``(n, d)`` (quantized per
+    out-channel on the fly; differentiable in both operands via the
+    straight-through estimator) or a pre-quantized ``(wq, sw)`` pair from
+    :func:`repro.core.wquant.quantize_weight` (the serving form;
+    differentiable in ``x`` only).
+
+    Plans must carry a non-dequant :class:`QuantEpilogue`; ``plan=None``
+    builds one from ``mode`` (default ``"int8"``). Grouped (non-power-of-
+    2) sizes and per-tensor scales fall back to the unfused oracle
+    semantics -- same math, separate XLA ops, pjit-shardable.
+    """
+    n = x.shape[-1]
+    if plan is None:
+        plan = plan_for(
+            n, dtype=x.dtype,
+            scale="ortho" if scale is _UNSET else scale,
+            backend=None if backend is _UNSET else backend,
+            epilogue=QuantEpilogue("int8" if mode is _UNSET else mode),
+            block_m=None if block_m is _UNSET else block_m,
+            compute_dtype=None if compute_dtype is _UNSET else compute_dtype,
+        )
+    else:
+        passed = [name for name, v in (("mode", mode), ("scale", scale),
+                                       ("backend", backend),
+                                       ("block_m", block_m),
+                                       ("compute_dtype", compute_dtype))
+                  if v is not _UNSET]
+        if passed:
+            raise ValueError(
+                f"quant_dot() got both an explicit plan and {passed}; plan "
+                "configuration is fixed at plan_for() time"
+            )
+        if plan.n != n:
+            raise ValueError(
+                f"plan was built for n={plan.n} but x has last axis {n}")
+        if jnp.dtype(plan.dtype) != x.dtype:
+            raise ValueError(
+                f"plan was built for dtype {plan.dtype} but x is "
+                f"{x.dtype.name}; build a plan with plan_for(n, "
+                "dtype=x.dtype, ...)")
+    if plan.epilogue is None or plan.epilogue.dequant:
+        raise ValueError(
+            "quant_dot requires a plan with a non-dequant QuantEpilogue "
+            f"(got {plan.epilogue!r}); use plan_for(n, epilogue="
+            "QuantEpilogue(mode))"
+        )
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if isinstance(w, tuple):
+        wq, sw = w
+        if wq.shape[0] != n:
+            raise ValueError(
+                f"quantized weight has contraction dim {wq.shape[0]}, "
+                f"expected {n}")
+        want_dt = QSPECS[plan.epilogue.mode][1]
+        if wq.dtype != want_dt:
+            raise ValueError(
+                f"pre-quantized weight dtype {wq.dtype.name} does not "
+                f"match the plan's {plan.epilogue.mode!r} storage dtype "
+                f"{jnp.dtype(want_dt).name}; quantize with "
+                "wquant.quantize_weight(w, mode)")
+        return _quant_dot_qw(x, wq, sw, plan, interpret)
+    if w.shape[0] != n:
+        raise ValueError(
+            f"weight has contraction dim {w.shape[0]}, expected {n}")
+    return _quant_dot_w(x, w, plan, interpret)

@@ -32,6 +32,7 @@ from repro.kernels.ref import hadamard_matrix, is_pow2
 
 __all__ = [
     "MXU_TILE",
+    "COMPUTE_DTYPES",
     "factorize",
     "base_matrices",
     "base_matrices_np",
@@ -39,9 +40,38 @@ __all__ = [
     "grouped_hadamard",
     "largest_pow2_divisor",
     "resolve_scale",
+    "resolve_compute_dtype",
 ]
 
 MXU_TILE = 128
+
+# Dtypes the transform passes may run in. The MXU multiplies 16-bit
+# operands at full rate and always accumulates f32 (preferred_element_type)
+# -- the paper's Appendix C recipe, and the Markidis/Ootomo low-precision-
+# multiply + f32-accumulate setup.
+COMPUTE_DTYPES = ("float32", "bfloat16", "float16")
+
+
+def resolve_compute_dtype(input_dtype, requested=None) -> str:
+    """Resolve the dtype the matmul passes run in (canonical name).
+
+    ``requested=None`` picks the native rule: 16-bit inputs (bf16/fp16)
+    run the passes in their own dtype -- no f32 VMEM copy, half the
+    compute-tile footprint, full-rate MXU multiplies with f32
+    accumulation -- while everything else computes in f32. An explicit
+    request (one of ``COMPUTE_DTYPES``) overrides the rule, e.g. to force
+    f32 passes on bf16 data for an accuracy A/B.
+    """
+    if requested is not None:
+        name = jnp.dtype(requested).name
+        if name not in COMPUTE_DTYPES:
+            raise ValueError(
+                f"unsupported compute dtype {requested!r}; expected one of "
+                f"{COMPUTE_DTYPES}"
+            )
+        return name
+    name = jnp.dtype(input_dtype).name
+    return name if name in ("bfloat16", "float16") else "float32"
 
 
 def resolve_scale(scale, n: int) -> Optional[float]:
@@ -114,13 +144,21 @@ def base_matrices(n: int, scale: Optional[float], dtype=jnp.float32) -> List[jnp
 def _apply_passes(x: jnp.ndarray, n: int, mats: List[jnp.ndarray]) -> jnp.ndarray:
     """Shared pass structure: minor-axis matmul, then one matmul per major
     128-factor with a transpose-in/transpose-out around each. ``x`` has
-    shape (M, n) and compute dtype (f32). Runs unchanged inside the Pallas
-    kernel body and under plain jit."""
+    shape (M, n) and is already in the COMPUTE dtype (f32, bf16 or fp16);
+    every matmul accumulates in f32 on the MXU (``preferred_element_type``)
+    and inter-pass intermediates stay in the compute dtype. Runs unchanged
+    inside the Pallas kernel body and under plain jit."""
     m = x.shape[0]
+    cd = x.dtype
+    mats = [mt if mt.dtype == cd else mt.astype(cd) for mt in mats]
+
+    def mm(a, b):
+        return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(cd)
+
     if n < MXU_TILE:
-        return x @ mats[0]
+        return mm(x, mats[0])
     # minor pass: contiguous 128-lane chunks
-    x = (x.reshape(m * (n // MXU_TILE), MXU_TILE) @ mats[0]).reshape(m, n)
+    x = mm(x.reshape(m * (n // MXU_TILE), MXU_TILE), mats[0]).reshape(m, n)
     # major passes: factor i acts on an axis of size 128 with `post`
     # trailing elements; pre * 128 * post == n
     num_major = len(mats) - 1
@@ -129,7 +167,7 @@ def _apply_passes(x: jnp.ndarray, n: int, mats: List[jnp.ndarray]) -> jnp.ndarra
     for i in range(num_major):
         xv = x.reshape(m * pre, MXU_TILE, post)
         xv = jnp.swapaxes(xv, -1, -2).reshape(m * pre * post, MXU_TILE)
-        xv = xv @ mats[i + 1]
+        xv = mm(xv, mats[i + 1])
         xv = jnp.swapaxes(xv.reshape(m * pre, post, MXU_TILE), -1, -2)
         x = xv.reshape(m, n)
         pre *= MXU_TILE

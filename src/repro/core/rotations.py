@@ -22,21 +22,25 @@ grouped transforms (exactness preserved; see DESIGN.md section 3).
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import api as _api
 from repro.core.api import QuantEpilogue, hadamard, plan_for
 from repro.core.hadamard import grouped_hadamard, largest_pow2_divisor
 from repro.core.quant import QuantConfig, quantize
+from repro.core.quant import quant_dot as _fake_quant_dot
 from repro.kernels.ref import hadamard_matrix
 
 __all__ = [
     "online_hadamard",
     "online_hadamard_quantize",
     "rotated_quant_dot",
+    "rotated_quant_dot_experts",
     "rotation_matrix",
     "rotate_activation_in",
     "fuse_rotation_rhs",
@@ -90,17 +94,94 @@ def online_hadamard_quantize(
     return hadamard(x, plan)
 
 
+def _quant_dot_plan(n: int, dtype, cfg: QuantConfig):
+    return plan_for(
+        n, dtype=dtype, backend=_cfg_backend(cfg),
+        epilogue=QuantEpilogue(cfg.mode, per_token=cfg.per_token),
+    )
+
+
 def rotated_quant_dot(x: jnp.ndarray, w: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
     """``x @ w`` with the online Hadamard on x's contraction axis and
-    fake-quantized operands -- the down-projection hot path (per-token
-    scales on the activation, per-out-channel scales on the weight). The
-    activation side is a single fused rotate+quantize kernel whenever the
-    plan supports it."""
+    REAL low-precision operands -- the down-projection hot path (per-token
+    scales on the activation, per-out-channel scales on the weight).
+
+    With a rotating+quantizing config this routes through
+    :func:`repro.core.api.quant_dot`: rotate, quantize, and the int8
+    (int32-accumulated) / fp8 contraction run as ONE fused kernel when the
+    plan supports it (pallas backend, power-of-2 n, per-token scales) --
+    the rotated quantized activations never round-trip through HBM, and
+    nothing fake-quantizes in f32 on the hot path. Both operands stay
+    differentiable via the straight-through estimator."""
     if not cfg.enabled:
         return online_hadamard(x, cfg) @ w
-    xq = online_hadamard_quantize(x, cfg)
-    wq = quantize(w, cfg.mode, axis=0)
-    return xq @ wq
+    if not cfg.rotating:
+        # no rotation insertion point: the plain fake-quant matmul
+        return _fake_quant_dot(x, w, cfg)
+    plan = _quant_dot_plan(x.shape[-1], x.dtype, cfg)
+    return _api.quant_dot(x, w, plan)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _rqd_experts(x, w, plan, interpret):
+    # einsum form of quant_dot for stacked expert weights: the activation
+    # side is the fused rotate+quantize kernel ((q, scales) epilogue); the
+    # contraction runs on the real low-precision grids per expert. The
+    # scales factor out of the einsum exactly (s per token row, sw per
+    # (expert, out-channel)).
+    from repro.core.wquant import quantize_weight
+    from repro.kernels.registry import QSPECS
+
+    q, s = hadamard(x, plan, interpret=interpret)
+    wq, sw = quantize_weight(w, plan.epilogue.mode)     # (E,f,d), (E,1,d)
+    if QSPECS[plan.epilogue.mode][2]:
+        acc = jnp.einsum("becf,efd->becd", q.astype(jnp.int8),
+                         wq.astype(jnp.int8),
+                         preferred_element_type=jnp.int32
+                         ).astype(jnp.float32)
+    else:
+        acc = jnp.einsum("becf,efd->becd",
+                         q.astype(jnp.bfloat16), wq.astype(jnp.bfloat16),
+                         preferred_element_type=jnp.float32)
+    out = acc * s * sw[None]                            # (B,E,c,d)*(1,E,1,d)
+    return out.astype(x.dtype)
+
+
+def _rqd_experts_fwd(x, w, plan, interpret):
+    return _rqd_experts(x, w, plan, interpret), (x, w)
+
+
+def _rqd_experts_bwd(plan, interpret, res, g):
+    # STE through both quantizations: out ~= had(x) @ w per expert.
+    x, w = res
+    stripped = _api._strip(plan)
+    gf = g.astype(jnp.float32)
+    gy = jnp.einsum("becd,efd->becf", gf, w.astype(jnp.float32))
+    gx = hadamard(gy.astype(x.dtype), stripped, interpret=interpret)
+    y = hadamard(x, stripped, interpret=interpret)
+    gw = jnp.einsum("becf,becd->efd", y.astype(jnp.float32), gf)
+    return gx, gw.astype(w.dtype)
+
+
+_rqd_experts.defvjp(_rqd_experts_fwd, _rqd_experts_bwd)
+
+
+def rotated_quant_dot_experts(x: jnp.ndarray, w: jnp.ndarray,
+                              cfg: QuantConfig) -> jnp.ndarray:
+    """Per-expert ``rotated_quant_dot``: ``einsum('becf,efd->becd')`` with
+    the shared online Hadamard on the dispatched activations (ONE fused
+    rotate+quantize kernel -- all experts share d_ff) and real int8/fp8
+    expert weights with per-(expert, out-channel) scales. The MoE
+    down-projection hot path."""
+    if not cfg.enabled:
+        return jnp.einsum("becf,efd->becd", online_hadamard(x, cfg), w)
+    if not cfg.rotating:
+        xq = quantize(x, cfg.mode, axis=-1 if cfg.per_token else None)
+        return jnp.einsum("becf,efd->becd", xq,
+                          quantize(w, cfg.mode, axis=-2))
+    plan = _quant_dot_plan(x.shape[-1], x.dtype, cfg)
+    interpret = jax.default_backend() != "tpu"
+    return _rqd_experts(x, w, plan, interpret)
 
 
 def rotation_matrix(n: int, key: Optional[jax.Array] = None) -> jnp.ndarray:

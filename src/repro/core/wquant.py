@@ -15,10 +15,27 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-__all__ = ["quantize_lm_weights", "dequant_tree", "is_qleaf", "qweight_specs"]
+__all__ = ["quantize_weight", "quantize_lm_weights", "dequant_tree",
+           "is_qleaf", "qweight_specs"]
 
 _INT8_MAX = 127.0
 _MIN_SIZE = 1 << 16   # don't quantize tiny leaves (norms, biases, LoRAs)
+
+
+def quantize_weight(w: jnp.ndarray, mode: str):
+    """Offline weight quantization for ``quant_dot`` consumers: ``(wq,
+    sw)`` with ``wq`` in the mode's real storage dtype (int8 / fp8) and
+    ``sw`` f32 per-OUT-channel scales (absmax over the contraction axis,
+    ``axis=-2``). Delegates to ``kernels.registry._quantize_rows`` -- the
+    same math the activation epilogues run -- so ``dequant(wq, sw)``
+    reproduces ``core.quant.quantize(w, mode, axis=-2)`` bit-for-bit.
+
+    w: (..., n, d) -- leading dims (e.g. stacked experts) keep their own
+    scales: sw is (..., 1, d)."""
+    from repro.kernels.registry import QSPECS, _quantize_rows
+
+    q, s = _quantize_rows(w.astype(jnp.float32), mode, axis=-2)
+    return q.astype(QSPECS[mode][1]), s
 
 
 def _should_quantize(path, leaf) -> bool:

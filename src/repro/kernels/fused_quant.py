@@ -19,6 +19,7 @@ fp8 epilogues validate against the same ground truth.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional, Tuple
 
 import jax.numpy as jnp
@@ -29,6 +30,21 @@ from repro.kernels.ref import is_pow2
 from repro.kernels.registry import MAX_KERNEL_SIZE, QSPECS, _quantize_rows
 
 __all__ = ["fused_hadamard_quantize", "ref_fused"]
+
+_warned = False  # one-shot: warn on first use per process, then stay quiet
+
+
+def _warn_once():
+    global _warned
+    if not _warned:
+        _warned = True
+        warnings.warn(
+            "repro.kernels.fused_quant.fused_hadamard_quantize is "
+            "deprecated; use repro.core.api.hadamard with a "
+            "QuantEpilogue (or repro.core.api.quant_dot for the fused "
+            "GEMM consumer)",
+            DeprecationWarning, stacklevel=3,
+        )
 
 
 def fused_hadamard_quantize(
@@ -43,6 +59,7 @@ def fused_hadamard_quantize(
     per row, in one VMEM-resident kernel. Returns (quantized values, f32
     scales). Deprecated: use ``repro.core.api.hadamard`` with a
     ``QuantEpilogue`` (which this wrapper now calls)."""
+    _warn_once()
     n = x.shape[-1]
     if n > MAX_KERNEL_SIZE:
         raise ValueError(f"fused kernel supports n <= {MAX_KERNEL_SIZE}, got {n}")

@@ -13,6 +13,7 @@ and optionally prebuild a plan for the hot path.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional
 
 import jax.numpy as jnp
@@ -21,6 +22,20 @@ from repro.core.api import hadamard as _hadamard
 from repro.kernels.ref import is_pow2
 
 __all__ = ["hadamard"]
+
+_warned = False  # one-shot: warn on first use per process, then stay quiet
+
+
+def _warn_once():
+    global _warned
+    if not _warned:
+        _warned = True
+        warnings.warn(
+            "repro.kernels.ops.hadamard is deprecated; use "
+            "repro.core.api.hadamard (optionally with a prebuilt plan_for "
+            "plan for the hot path)",
+            DeprecationWarning, stacklevel=3,
+        )
 
 
 def hadamard(x: jnp.ndarray, scale: Optional[str] = "ortho",
@@ -33,6 +48,7 @@ def hadamard(x: jnp.ndarray, scale: Optional[str] = "ortho",
     of-2 sizes are rejected as before (the plan API's grouped transform
     is an explicit opt-in, not a silent substitute).
     """
+    _warn_once()
     if not is_pow2(x.shape[-1]):
         raise ValueError(f"Hadamard size must be a power of 2, got {x.shape[-1]}")
     return _hadamard(x, scale=scale, backend=backend)

@@ -1,0 +1,202 @@
+"""Fused rotate -> quantize -> GEMM consumer kernel (the quantized hot
+path, end to end in low precision).
+
+The paper's kernel makes the online rotation cheap; its *consumer* is a
+quantized matmul (QuaRot down-proj, FP8 attention). PR 1 fused the
+rotation with the quantize epilogue so the quantized tensor is the only
+HBM output -- but the consumer GEMM still read it back from HBM and the
+models fake-quantized both operands in f32. This kernel closes the loop:
+one grid step rotates a (block_m, n) row block in the plan's compute
+dtype (bf16/fp16 multiplies, f32 MXU accumulation -- the
+Markidis / Ootomo recipe), quantizes it per token, and immediately
+contracts it against an offline-quantized weight tile:
+
+  * int8 operands with int32 MXU accumulation (``preferred_element_type``)
+  * fp8 operands multiplied exactly in bf16 (both fp8 grids embed exactly:
+    <= 5 mantissa bits and products of two fp8 values fit bf16's 8) with
+    f32 accumulation
+
+applying ``scale_x * scale_w`` in the epilogue. The rotated/quantized
+activations never round-trip through HBM.
+
+Grid: 2D over (row blocks, out-channel blocks). The rotation+quantize of
+a row block is recomputed per out-channel block -- compute the transform
+trades for HBM traffic exactly as the paper's roofline argues (the
+transform is ~k*128 flops/element vs. an n-element tile re-read).
+
+``epilogue_dot`` is the single source of truth for the quantized-GEMM
+math; the unfused fallback (grouped transforms, per-tensor scales,
+``xla_quant_dot`` -- the pjit-shardable path and the test oracle) shares
+it so fused and unfused paths agree bit-for-bit in the contraction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.hadamard import _apply_passes
+from repro.kernels.registry import (
+    QSPECS,
+    TRACE_COUNTS,
+    _VMEM_BUDGET_BYTES,
+    _pad_rows,
+    _plan_mats,
+    _quantize_rows,
+    _rows,
+    _xla_transform,
+)
+
+__all__ = ["pallas_quant_dot", "xla_quant_dot", "epilogue_dot",
+           "quant_dot_blocks"]
+
+_CONTRACT = (((1,), (0,)), ((), ()))  # plain (m, k) @ (k, n)
+
+# Largest contraction dim whose worst-case int8 x int8 row sum stays in
+# int32: 127 * 127 * 2^17 ~= 2.11e9 < 2^31 - 1 (2^18 would wrap). Only
+# the above-cap XLA fallback can exceed this -- the kernel caps at 2^15.
+_INT32_SAFE_K = 1 << 17
+
+# fp8 operand bytes/element inside the kernel: the 1-byte storage grid
+# plus the exact bf16 embedding the dot runs in.
+_FP8_OPERAND_BYTES = 3
+
+
+def _low_precision_dot(q, wq, mode):
+    """The quantized contraction on the mode's native arithmetic: int8
+    operands accumulate exactly in int32; fp8 operands are embedded in
+    bf16 (exact) and accumulate f32. ``q`` comes from ``_quantize_rows``
+    pre-cast (f32 values on the grid). Returns f32."""
+    is_int = QSPECS[mode][2]
+    if is_int and q.shape[-1] <= _INT32_SAFE_K:
+        acc = jax.lax.dot_general(
+            q.astype(jnp.int8), wq.astype(jnp.int8), _CONTRACT,
+            preferred_element_type=jnp.int32)
+        return acc.astype(jnp.float32)
+    if is_int:
+        # contraction too long for exact int32: f32 accumulation of the
+        # exact grid products (values <= 127 are f32-exact)
+        return jax.lax.dot_general(
+            q, wq.astype(jnp.float32), _CONTRACT,
+            preferred_element_type=jnp.float32)
+    qdt = QSPECS[mode][1]
+    a = q.astype(qdt).astype(jnp.bfloat16)
+    b = wq.astype(jnp.bfloat16)
+    return jax.lax.dot_general(a, b, _CONTRACT,
+                               preferred_element_type=jnp.float32)
+
+
+def epilogue_dot(q, s, wq, sw, mode: str, out_dtype) -> jnp.ndarray:
+    """``(q * s) @ (wq * sw)`` with the scales factored OUT of the matmul:
+    ``(q @ wq) * s * sw`` -- exact because s is per row of q and sw per
+    column of wq. q: (..., n) grid values, s broadcastable per-token (or
+    per-tensor) scales, wq: (n, d) storage-dtype weight, sw: (1, d)."""
+    lead = q.shape[:-1]
+    n, d = q.shape[-1], wq.shape[-1]
+    acc = _low_precision_dot(q.reshape(-1, n), wq, mode).reshape(*lead, d)
+    return (acc * s * sw.reshape((1,) * len(lead) + (d,))).astype(out_dtype)
+
+
+def quant_dot_blocks(n: int, d: int, m: int, dtype, compute_dtype,
+                     mode: str):
+    """(block_m, block_n) for the fused kernel, charging every VMEM
+    resident: input tile + compute-dtype copy + quantized operand copy per
+    row, the (n, block_n) weight tile, the (block_m, block_n) output tile,
+    and the per-out-channel scales."""
+    in_b = jnp.dtype(dtype).itemsize
+    cb = jnp.dtype(compute_dtype).itemsize
+    is_int = QSPECS[mode][2]
+    # quantized-operand bytes/element: the 1-byte storage grid, plus the
+    # exact bf16 embedding both fp8 operands run the dot in
+    qb = 1 if is_int else _FP8_OPERAND_BYTES
+    wb = 1 if is_int else _FP8_OPERAND_BYTES
+    bn = min(512, -(-d // 128) * 128)
+    # keep the weight tile at most half the budget (it is revisited per
+    # row block, so oversizing it starves block_m); step in 128-lane
+    # multiples so the BlockSpec last dim stays MXU-tiled
+    while n * bn * wb > _VMEM_BUDGET_BYTES // 2 and bn > 128:
+        bn -= 128
+    per_row = n * (in_b + cb + qb) + bn * in_b + 4
+    bm = max(8, (_VMEM_BUDGET_BYTES - n * bn * wb) // per_row)
+    bm = min(bm, 256, m)
+    sub = 16 if in_b == 2 else 8
+    return max(sub, (bm // sub) * sub), bn
+
+
+def _quant_dot_kernel(x_ref, mats_ref, wq_ref, sw_ref, o_ref, *, n: int,
+                      mode: str, compute_dtype):
+    """One grid step: rotate a (block_m, n) row block in the compute
+    dtype, per-token quantize, contract against the (n, block_n) weight
+    tile, scale, write back -- the (block_m, block_n) output tile is the
+    only HBM write."""
+    x = x_ref[...].astype(compute_dtype)
+    bm = x.shape[0]
+    mats = [mats_ref[p] for p in range(mats_ref.shape[0])]
+    y = _apply_passes(x.reshape(bm, n), n, mats)
+    q, s = _quantize_rows(y.astype(jnp.float32), mode)
+    acc = _low_precision_dot(q, wq_ref[...], mode)
+    o_ref[...] = (acc * s * sw_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "interpret"))
+def pallas_quant_dot(x, wq, sw, plan, interpret: bool):
+    """Fused single-kernel rotate+quantize+GEMM over a 2D Pallas grid.
+
+    x: (..., n) with n == plan.p (power of 2); wq: (n, d) storage-dtype
+    weight; sw: (1, d) or (d,) f32 per-out-channel scales. Returns
+    (..., d) in the plan's io dtype.
+    """
+    TRACE_COUNTS[("pallas", "quant_dot")] += 1
+    n = plan.p
+    mode = plan.epilogue.mode
+    mats = _plan_mats(plan)
+    lead = x.shape[:-1]
+    x2, m = _rows(x, n)
+    d = wq.shape[-1]
+    sw2 = sw.reshape(1, d).astype(jnp.float32)
+    bm, bn = quant_dot_blocks(
+        n, d, m, x.dtype, jnp.dtype(plan.compute_dtype), mode)
+    if plan.block_m:
+        bm = plan.block_m
+    x2, _ = _pad_rows(x2, bm)
+    pad_d = (-d) % bn
+    if pad_d:
+        wq2 = jnp.pad(wq, ((0, 0), (0, pad_d)))
+        sw2 = jnp.pad(sw2, ((0, 0), (0, pad_d)))
+    else:
+        wq2 = wq
+    mp, dp = x2.shape[0], d + pad_d
+    kernel = functools.partial(
+        _quant_dot_kernel, n=n, mode=mode,
+        compute_dtype=jnp.dtype(plan.compute_dtype))
+    out = pl.pallas_call(
+        kernel,
+        grid=(mp // bm, dp // bn),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((mats.shape[0],) + mats.shape[1:],
+                         lambda i, j: (0, 0, 0)),
+            pl.BlockSpec((n, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, dp), jnp.dtype(plan.dtype)),
+        interpret=interpret,
+    )(x2, mats, wq2, sw2)
+    return out[:m, :d].reshape(*lead, d)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "interpret"))
+def xla_quant_dot(x, wq, sw, plan, interpret: bool):
+    """Unfused oracle semantics on the factored XLA path: rotate, quantize
+    per token, then the SAME ``epilogue_dot`` contraction (int8/int32 or
+    fp8-in-bf16/f32). Shards trivially under pjit -- the fallback for
+    sizes above the kernel cap and the ground truth the fused kernel is
+    tested against."""
+    TRACE_COUNTS[("xla", "quant_dot")] += 1
+    y = _xla_transform(x, plan)
+    q, s = _quantize_rows(y.astype(jnp.float32), mode=plan.epilogue.mode)
+    return epilogue_dot(q, s, wq, sw.reshape(1, wq.shape[-1]),
+                        plan.epilogue.mode, jnp.dtype(plan.dtype))

@@ -78,16 +78,38 @@ QSPECS = {
 TRACE_COUNTS: collections.Counter = collections.Counter()
 
 
-def default_block_m(n: int, m: int, dtype=jnp.float32) -> int:
+def _epilogue_out_bytes_per_row(n: int, in_itemsize: int, epilogue) -> int:
+    """HBM-output bytes one row contributes inside the kernel's VMEM tile.
+
+    * no epilogue        -> the rotated row in the io dtype
+    * (q, scales) form   -> the quantized row + one f32 scale
+    * dequant form       -> the fake-quantized row in the io dtype
+    """
+    if epilogue is None or epilogue.dequant:
+        return n * in_itemsize
+    q_itemsize = jnp.dtype(QSPECS[epilogue.mode][1]).itemsize
+    return n * q_itemsize + 4
+
+
+def default_block_m(n: int, m: int, dtype=jnp.float32, *,
+                    compute_dtype=None, epilogue=None) -> int:
     """Rows per grid step. Plays the role of the paper's empirically chosen
     warps_per_block x num_chunks: large enough to keep the MXU busy
-    (>=128-row matmuls when possible), small enough that x + out + f32
-    scratch fit the VMEM budget."""
-    bytes_per_row = n * (jnp.dtype(dtype).itemsize + 4)  # io tile + f32 compute copy
+    (>=128-row matmuls when possible), small enough that the ACTUAL VMEM
+    residents fit the budget: the input tile, the compute-dtype working
+    copy (bf16/fp16 plans skip the old unconditional f32 upcast, so
+    16-bit inputs get ~2x larger row tiles), and every epilogue output
+    (the fused kernels' q tile + per-row scales used to go uncharged,
+    overshooting the budget the docstring promises for large n)."""
+    in_b = jnp.dtype(dtype).itemsize
+    cb = jnp.dtype(compute_dtype).itemsize if compute_dtype is not None else 4
+    bytes_per_row = n * (in_b + cb) + _epilogue_out_bytes_per_row(
+        n, in_b, epilogue)
     bm = max(8, _VMEM_BUDGET_BYTES // max(bytes_per_row, 1))
     bm = min(bm, 256, m)
-    # round down to a multiple of 8 (f32 sublane); keep at least 8
-    return max(8, (bm // 8) * 8)
+    # round down to the sublane multiple of the io dtype; keep one sublane
+    sub = 16 if in_b == 2 else 8
+    return max(sub, (bm // sub) * sub)
 
 
 # ---------------------------------------------------------------- registry
@@ -157,12 +179,19 @@ class Backend:
     # to transform + XLA epilogue).
     fused = None
     fused_dequant = None
+    # Optional rotate+quantize+GEMM consumer path (None = dispatcher falls
+    # back to transform + shared unfused epilogue-dot math).
+    quant_dot = None
 
 
 # ---------------------------------------------------------------- kernels
-def _hadacore_kernel(x_ref, mats_ref, o_ref, *, n: int):
-    """One grid step: transform a (block_m, n) row block entirely in VMEM."""
-    x = x_ref[...].astype(jnp.float32)
+def _hadacore_kernel(x_ref, mats_ref, o_ref, *, n: int, compute_dtype):
+    """One grid step: transform a (block_m, n) row block entirely in VMEM.
+
+    The row block is cast to the plan's compute dtype (a no-op for bf16
+    inputs on the default native rule -- no f32 VMEM copy); the matmul
+    passes accumulate f32 on the MXU (``_apply_passes``)."""
+    x = x_ref[...].astype(compute_dtype)
     bm = x.shape[0]
     mats = [mats_ref[p] for p in range(mats_ref.shape[0])]
     y = _apply_passes(x.reshape(bm, n), n, mats)
@@ -200,29 +229,32 @@ def _dequantize(q: jnp.ndarray, s: jnp.ndarray, mode: str) -> jnp.ndarray:
     return q * s
 
 
-def _fused_kernel(x_ref, mats_ref, q_ref, s_ref, *, n: int, mode: str):
+def _fused_kernel(x_ref, mats_ref, q_ref, s_ref, *, n: int, mode: str,
+                  compute_dtype):
     """Rotate a row block and quantize it before write-back: the quantized
     tensor plus scales are the only HBM outputs (paper's future-work
-    fusion, generalized from int8 to fp8_e4m3 / fp8_e5m2)."""
-    x = x_ref[...].astype(jnp.float32)
+    fusion, generalized from int8 to fp8_e4m3 / fp8_e5m2). Passes run in
+    the plan's compute dtype; the epilogue statistics stay f32."""
+    x = x_ref[...].astype(compute_dtype)
     bm = x.shape[0]
     mats = [mats_ref[p] for p in range(mats_ref.shape[0])]
     y = _apply_passes(x.reshape(bm, n), n, mats)
-    q, s = _quantize_rows(y, mode)
+    q, s = _quantize_rows(y.astype(jnp.float32), mode)
     q_ref[...] = q.astype(q_ref.dtype)
     s_ref[...] = s
 
 
-def _fused_dequant_kernel(x_ref, mats_ref, o_ref, *, n: int, mode: str):
+def _fused_dequant_kernel(x_ref, mats_ref, o_ref, *, n: int, mode: str,
+                          compute_dtype):
     """Rotate + quantize-dequantize (fake quant) in one VMEM-resident pass:
     the training-path twin of ``_fused_kernel``. Reproduces
     ``core.quant.quantize`` numerics exactly, including the fp8 cast
     round-trip through the real storage dtype."""
-    x = x_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(compute_dtype)
     bm = x.shape[0]
     mats = [mats_ref[p] for p in range(mats_ref.shape[0])]
     y = _apply_passes(x.reshape(bm, n), n, mats)
-    q, s = _quantize_rows(y, mode)
+    q, s = _quantize_rows(y.astype(jnp.float32), mode)
     o_ref[...] = _dequantize(q, s, mode).reshape(x_ref.shape).astype(o_ref.dtype)
 
 
@@ -241,7 +273,11 @@ def _pad_rows(x2: jnp.ndarray, bm: int):
 
 
 def _plan_mats(plan) -> jnp.ndarray:
-    return jnp.asarray(plan.mats, dtype=jnp.float32)  # (P, b, b)
+    # (P, b, b) in the plan's compute dtype: the base matrices are the
+    # multiply operands of every pass, so they ride the low-precision path
+    # too (entries are +-scale; for pow-of-4 n the ortho scale is exact in
+    # bf16, otherwise it rounds like any bf16 constant).
+    return jnp.asarray(plan.mats, dtype=jnp.dtype(plan.compute_dtype))
 
 
 # ----------------------------------------------------------------- pallas
@@ -257,7 +293,9 @@ def _pallas_rows_call(x, plan, interpret: bool, kernel, out_kinds,
     b = mats.shape[-1]
     orig_shape = x.shape
     x2, m = _rows(x, n)
-    bm = plan.block_m or default_block_m(n, m, x.dtype)
+    bm = plan.block_m or default_block_m(
+        n, m, x.dtype, compute_dtype=jnp.dtype(plan.compute_dtype),
+        epilogue=plan.epilogue)
     x2, pad = _pad_rows(x2, bm)
     mp = x2.shape[0]
     out_specs, out_shape = [], []
@@ -295,7 +333,9 @@ def _pallas_rows_call(x, plan, interpret: bool, kernel, out_kinds,
 @functools.partial(jax.jit, static_argnames=("plan", "interpret", "in_place"))
 def _pallas_transform(x, plan, interpret: bool, in_place: bool = False):
     TRACE_COUNTS[("pallas", "transform")] += 1
-    kernel = functools.partial(_hadacore_kernel, n=plan.p)
+    kernel = functools.partial(
+        _hadacore_kernel, n=plan.p,
+        compute_dtype=jnp.dtype(plan.compute_dtype))
     return _pallas_rows_call(x, plan, interpret, kernel,
                              [("tile", x.dtype)], in_place)
 
@@ -304,7 +344,9 @@ def _pallas_transform(x, plan, interpret: bool, in_place: bool = False):
 def _pallas_fused(x, plan, interpret: bool):
     TRACE_COUNTS[("pallas", "fused")] += 1
     mode = plan.epilogue.mode
-    kernel = functools.partial(_fused_kernel, n=plan.p, mode=mode)
+    kernel = functools.partial(
+        _fused_kernel, n=plan.p, mode=mode,
+        compute_dtype=jnp.dtype(plan.compute_dtype))
     return _pallas_rows_call(
         x, plan, interpret, kernel,
         [("tile", QSPECS[mode][1]), ("rowscale", jnp.float32)])
@@ -314,7 +356,8 @@ def _pallas_fused(x, plan, interpret: bool):
 def _pallas_fused_dequant(x, plan, interpret: bool):
     TRACE_COUNTS[("pallas", "fused_dequant")] += 1
     kernel = functools.partial(
-        _fused_dequant_kernel, n=plan.p, mode=plan.epilogue.mode)
+        _fused_dequant_kernel, n=plan.p, mode=plan.epilogue.mode,
+        compute_dtype=jnp.dtype(plan.compute_dtype))
     return _pallas_rows_call(x, plan, interpret, kernel, [("tile", x.dtype)])
 
 
@@ -335,15 +378,22 @@ class PallasBackend(Backend):
     def fused_dequant(self, x, plan, interpret):
         return _pallas_fused_dequant(x, plan, interpret)
 
+    def quant_dot(self, x, wq, sw, plan, interpret):
+        # lazy import: quant_dot.py imports this module at load time
+        from repro.kernels.quant_dot import pallas_quant_dot
+
+        return pallas_quant_dot(x, wq, sw, plan, interpret)
+
 
 # -------------------------------------------------------------------- xla
 @functools.partial(jax.jit, static_argnames=("plan",))
 def _xla_transform(x, plan):
     TRACE_COUNTS[("xla", "transform")] += 1
     n = plan.p
-    mats = [jnp.asarray(m) for m in plan.mats]
+    cd = jnp.dtype(plan.compute_dtype)
+    mats = [jnp.asarray(m, dtype=cd) for m in plan.mats]
     orig_shape, orig_dtype = x.shape, x.dtype
-    x2, _ = _rows(x.astype(jnp.float32), n)
+    x2, _ = _rows(x.astype(cd), n)
     y = _apply_passes(x2, n, mats)
     return y.reshape(orig_shape).astype(orig_dtype)
 
@@ -358,6 +408,13 @@ class XlaBackend(Backend):
 
     def transform(self, x, plan, interpret):
         return _xla_transform(x, plan)
+
+    def quant_dot(self, x, wq, sw, plan, interpret):
+        # unfused oracle semantics: factored rotate, shared epilogue+dot
+        # math (pjit-shardable -- every op is a reshape/dot)
+        from repro.kernels.quant_dot import xla_quant_dot
+
+        return xla_quant_dot(x, wq, sw, plan, interpret)
 
 
 # -------------------------------------------------------------------- ref

@@ -82,7 +82,11 @@ def _rotate_quant_qk(cfg, q, k):
 
     When both rotation and KV quantization are on, each head's rotation +
     per-token quantize run as ONE fused kernel (plan epilogue) instead of
-    two HBM round trips."""
+    two HBM round trips. With bf16/fp16 models the plan's compute dtype
+    keeps the transform passes in the model dtype (f32 MXU accumulation
+    only -- no f32 upcast of the head_dim tiles in VMEM), so the QK path
+    never touches f32 activations before the f32-accumulated score
+    einsum."""
     qc = cfg.quant
     if qc.rotating and qc.enabled and qc.kv_quant:
         q = online_hadamard_quantize(q, qc, per_token=True)

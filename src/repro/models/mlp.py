@@ -15,7 +15,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.core.rotations import online_hadamard, online_hadamard_quantize, rotated_quant_dot
+from repro.core.rotations import rotated_quant_dot, rotated_quant_dot_experts
 from repro.distributed.sharding import constrain
 from repro.models.common import dense_init
 
@@ -49,8 +49,9 @@ def apply_mlp(cfg, p, x):
         else _act(cfg, x @ p["w_up"])
     h = constrain(h, "batch", "seq", "dff")
     # ---- the paper's online rotation: Hadamard on the down_proj input,
-    # fused with the activation quantization in one kernel when the plan
-    # supports it (rotate="hadamard" + mode!="none" + backend="pallas") ----
+    # fused with the activation quantization AND the int8/fp8 down-proj
+    # GEMM in one quant_dot kernel when the plan supports it
+    # (rotate="hadamard" + mode!="none" + backend="pallas") ----
     y = rotated_quant_dot(h, p["w_down"], qc)
     return constrain(y, "batch", "seq", None)
 
@@ -115,14 +116,11 @@ def apply_moe(cfg, p, x):
     u = jnp.einsum("becd,edf->becf", xin, we["w_up"])
     h = _act(cfg, g) * u
     h = constrain(h, "moebatch", "experts", None, "dff")
-    if qc.enabled:
-        from repro.core.quant import quantize
-        h = online_hadamard_quantize(h, qc)                 # shared Hadamard, fused
-        wd = quantize(we["w_down"], qc.mode, axis=1)
-    else:
-        h = online_hadamard(h, qc)                          # shared Hadamard
-        wd = we["w_down"]
-    yout = jnp.einsum("becf,efd->becd", h, wd)
+    # shared online Hadamard (all experts share d_ff) + REAL int8/fp8
+    # expert down-proj: one fused rotate+quantize kernel feeding a
+    # low-precision einsum with int32/f32 accumulation -- no f32
+    # fake-quant on the hot path (see rotations.rotated_quant_dot_experts)
+    yout = rotated_quant_dot_experts(h, we["w_down"], qc)
     y = jnp.einsum("bsec,becd->bsd", combine.astype(x.dtype), yout)
     y = constrain(y, "batch", "seq", None)
 

@@ -236,8 +236,10 @@ def apply_rwkv_cmix(cfg, p, x, x_prev=None, *, return_state: bool = False):
     r = jax.nn.sigmoid(xr @ p["wr"])
     k = jnp.square(jax.nn.relu(xk @ p["wk"]))
     k = constrain(k, "batch", "seq", "dff")
-    # the paper's online rotation point (down-projection input), fused
-    # with the activation quantization when the plan supports it
+    # the paper's online rotation point (down-projection input): rotate +
+    # per-token quantize + the real int8/fp8 contraction run as one fused
+    # quant_dot kernel when the plan supports it (no f32 fake-quant, no
+    # HBM round trip of the rotated tensor)
     y = r * rotated_quant_dot(k, p["wv"], cfg.quant)
     y = constrain(y, "batch", "seq", None)
     if return_state:

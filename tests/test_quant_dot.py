@@ -1,0 +1,333 @@
+"""The fused rotate->quantize->GEMM consumer path (DESIGN.md section 6):
+quant_dot against the unfused ``quantize(hadamard(x)) @ quantize(w)``
+oracle across modes x dtypes x pow2/non-pow2 sizes, single-kernel
+lowering of the model hot path, compute-dtype-aware plans (native bf16
+passes + honest VMEM accounting), STE gradients, no-retrace plan
+caching, and the deprecation shims."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.api import (
+    QuantEpilogue,
+    hadamard,
+    plan_for,
+    quant_dot,
+)
+from repro.core.hadamard import resolve_compute_dtype
+from repro.core.quant import QuantConfig, quantize
+from repro.core.rotations import rotated_quant_dot, rotated_quant_dot_experts
+from repro.core.wquant import quantize_weight
+from repro.kernels import registry
+from repro.kernels.registry import default_block_m
+
+MODES = ("int8", "fp8_e4m3", "fp8_e5m2")
+# contraction-rounding tolerance vs. the fake-quant oracle (the oracle
+# rounds dequantized operands to the io dtype before its matmul; the real
+# path contracts exactly on the int8/fp8 grid and scales afterwards)
+TOL = {jnp.float32: 1e-4, jnp.bfloat16: 5e-2, jnp.float16: 1e-2}
+
+
+def _x(shape, seed=0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+def _oracle(x, w, mode, backend):
+    """The unfused reference the issue names: fake-quantize the rotated
+    activation per token and the weight per out-channel, then matmul."""
+    xq = quantize(hadamard(x, backend=backend), mode, axis=-1)
+    wq = quantize(w, mode, axis=0)
+    return xq @ wq
+
+
+def _rel_err(got, want):
+    want = np.asarray(want, np.float32)
+    got = np.asarray(got, np.float32)
+    return np.abs(got - want).max() / max(np.abs(want).max(), 1e-6)
+
+
+# --------------------------------------------------------------- oracle
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
+@pytest.mark.parametrize("n", [256, 384])  # pow2 (fused) and 3*128 (grouped)
+def test_quant_dot_matches_unfused_oracle(mode, dtype, n):
+    x = _x((9, n), seed=n, dtype=dtype)
+    w = _x((n, 160), seed=n + 1, dtype=dtype) * 0.05
+    out = quant_dot(x, w, mode=mode, backend="pallas")
+    want = _oracle(x, w, mode, backend="pallas")
+    assert out.shape == (9, 160) and out.dtype == x.dtype
+    assert _rel_err(out, want) < TOL[dtype]
+
+
+@settings(deadline=None, max_examples=8)
+@given(logn=st.integers(5, 10), seed=st.integers(0, 2**31 - 1),
+       mode=st.sampled_from(MODES))
+def test_property_quant_dot_pow2(logn, seed, mode):
+    n = 2 ** logn
+    x = _x((5, n), seed=seed)
+    w = _x((n, 96), seed=seed + 1) * 0.1
+    out = quant_dot(x, w, mode=mode, backend="pallas")
+    assert _rel_err(out, _oracle(x, w, mode, "pallas")) < 1e-3
+
+
+@settings(deadline=None, max_examples=6)
+@given(g=st.integers(3, 7), logp=st.integers(4, 7),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_quant_dot_grouped(g, logp, seed):
+    n = g * 2 ** logp  # non-power-of-2: unfused fallback, grouped rotate
+    if n & (n - 1) == 0:
+        n += 2 ** logp  # g even could make a pow2; keep it grouped
+    x = _x((4, n), seed=seed)
+    w = _x((n, 64), seed=seed + 1) * 0.1
+    out = quant_dot(x, w, mode="int8")
+    xq = quantize(hadamard(x), "int8", axis=-1)
+    want = xq @ quantize(w, "int8", axis=0)
+    assert _rel_err(out, want) < 1e-3
+
+
+def test_prequantized_weights_match_on_the_fly():
+    x = _x((7, 512), seed=3)
+    w = _x((512, 128), seed=4) * 0.05
+    for mode in MODES:
+        a = quant_dot(x, w, mode=mode, backend="pallas")
+        b = quant_dot(x, quantize_weight(w, mode), mode=mode,
+                      backend="pallas")
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_pallas_and_xla_backends_agree_bitwise():
+    x = _x((11, 1024), seed=5)
+    w = _x((1024, 192), seed=6) * 0.05
+    for mode in MODES:
+        a = quant_dot(x, w, mode=mode, backend="pallas")
+        b = quant_dot(x, w, mode=mode, backend="xla")
+        # same epilogue math, same exact low-precision contraction
+        assert (np.asarray(a, np.float32) == np.asarray(b, np.float32)).all()
+
+
+# ----------------------------------------------------------- validation
+def test_quant_dot_plan_validation():
+    x = _x((4, 256))
+    w = _x((256, 64))
+    with pytest.raises(ValueError, match="non-dequant"):
+        quant_dot(x, w, plan_for(256))  # no epilogue
+    with pytest.raises(ValueError, match="non-dequant"):
+        quant_dot(x, w, plan_for(
+            256, epilogue=QuantEpilogue("int8", dequant=True)))
+    with pytest.raises(ValueError, match="explicit plan"):
+        quant_dot(x, w, plan_for(256, epilogue=QuantEpilogue("int8")),
+                  mode="int8")
+    with pytest.raises(ValueError, match="contraction dim"):
+        quant_dot(x, _x((128, 64)), mode="int8")
+    with pytest.raises(ValueError, match="dtype"):
+        quant_dot(_x((4, 256), dtype=jnp.bfloat16), w,
+                  plan_for(256, epilogue=QuantEpilogue("int8")))
+    with pytest.raises(ValueError, match="storage dtype"):
+        quant_dot(x, quantize_weight(w, "fp8_e4m3"), mode="int8")
+
+
+def test_qd_fusability_vmem_budget_guard():
+    """fp8 weight tiles cost 3 bytes/element in VMEM (storage + bf16
+    embedding): at the n=2^15 kernel cap even the minimal (n, 128) tile
+    busts the budget, so the plan must take the unfused fallback; int8
+    still fuses."""
+    from repro.core.api import _qd_fusable
+
+    assert _qd_fusable(
+        plan_for(32768, backend="pallas", epilogue=QuantEpilogue("int8")))
+    assert not _qd_fusable(
+        plan_for(32768, backend="pallas",
+                 epilogue=QuantEpilogue("fp8_e4m3")))
+    assert _qd_fusable(
+        plan_for(4096, backend="pallas",
+                 epilogue=QuantEpilogue("fp8_e4m3")))
+
+
+# ---------------------------------------------------- single-kernel HLO
+def _count_pallas_calls(jaxpr) -> int:
+    from jax.core import ClosedJaxpr, Jaxpr
+
+    def walk(v):
+        if isinstance(v, ClosedJaxpr):
+            return count(v.jaxpr)
+        if isinstance(v, Jaxpr):
+            return count(v)
+        if isinstance(v, (list, tuple)):
+            return sum(walk(u) for u in v)
+        return 0
+
+    def count(j):
+        total = 0
+        for eqn in j.eqns:
+            if eqn.primitive.name == "pallas_call":
+                total += 1
+            for param in eqn.params.values():
+                total += walk(param)
+        return total
+
+    return count(jaxpr)
+
+
+def test_rotated_quant_dot_lowers_to_single_pallas_call():
+    """Acceptance: pallas + int8 + pow2 n is ONE pallas_call -- rotate,
+    quantize AND the GEMM; no HBM round trip of the rotated tensor."""
+    cfg = QuantConfig(mode="int8", rotate="hadamard", backend="pallas")
+    x = _x((2, 4, 2048), seed=7)
+    w = _x((2048, 256), seed=8) * 0.05
+    jaxpr = jax.make_jaxpr(lambda a, b: rotated_quant_dot(a, b, cfg))(x, w)
+    assert _count_pallas_calls(jaxpr.jaxpr) == 1
+    # ... and the dot really happened inside it: no dot_general outside
+    outer_dots = [e for e in jaxpr.jaxpr.eqns
+                  if e.primitive.name == "dot_general"]
+    assert not outer_dots
+
+
+def test_trace_counts_stable_for_quant_dot():
+    cfg = QuantConfig(mode="int8", rotate="hadamard", backend="pallas")
+    w = _x((512, 64), seed=9) * 0.1
+    rotated_quant_dot(_x((8, 512)), w, cfg)  # warm
+    key = ("pallas", "quant_dot")
+    before = registry.TRACE_COUNTS[key]
+    for seed in range(3):
+        rotated_quant_dot(_x((8, 512), seed=seed), w, cfg)
+    assert registry.TRACE_COUNTS[key] == before
+    rotated_quant_dot(_x((4, 1024)), _x((1024, 64)) * 0.1, cfg)
+    assert registry.TRACE_COUNTS[key] == before + 1
+
+
+# ------------------------------------------------------------ autodiff
+def test_quant_dot_ste_gradients():
+    x = _x((6, 256), seed=11)
+    w = _x((256, 96), seed=12) * 0.1
+    g = _x((6, 96), seed=13)
+    gx, gw = jax.grad(
+        lambda a, b: jnp.sum(quant_dot(a, b, mode="int8",
+                                       backend="pallas") * g),
+        argnums=(0, 1))(x, w)
+    # STE: out ~= had(x) @ w, so gx = had(g w^T), gw = had(x)^T g
+    want_gx = hadamard(g @ w.T, backend="pallas")
+    want_gw = hadamard(x, backend="pallas").T @ g
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(want_gx),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(want_gw),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_quant_dot_prequantized_weight_gets_no_gradient():
+    x = _x((4, 256), seed=14)
+    wq, sw = quantize_weight(_x((256, 32), seed=15) * 0.1, "fp8_e4m3")
+    gx, gsw = jax.grad(
+        lambda a, s: jnp.sum(quant_dot(a, (wq, s), mode="fp8_e4m3",
+                                       backend="pallas") ** 2),
+        argnums=(0, 1))(x, sw)
+    assert bool(jnp.isfinite(gx).all()) and float(jnp.abs(gx).max()) > 0
+    assert float(jnp.abs(gsw).max()) == 0.0  # scale is a statistic
+
+
+# ------------------------------------------------- compute-dtype plans
+def test_compute_dtype_resolution():
+    assert resolve_compute_dtype(jnp.float32) == "float32"
+    assert resolve_compute_dtype(jnp.bfloat16) == "bfloat16"
+    assert resolve_compute_dtype(jnp.float16) == "float16"
+    assert resolve_compute_dtype(jnp.bfloat16, jnp.float32) == "float32"
+    with pytest.raises(ValueError):
+        resolve_compute_dtype(jnp.float32, jnp.int8)
+    assert plan_for(4096, dtype=jnp.bfloat16).compute_dtype == "bfloat16"
+    assert plan_for(4096, dtype=jnp.float32).compute_dtype == "float32"
+    # the override is part of the cache key
+    p32 = plan_for(4096, dtype=jnp.bfloat16, compute_dtype=jnp.float32)
+    assert p32.compute_dtype == "float32"
+    assert p32 is not plan_for(4096, dtype=jnp.bfloat16)
+
+
+def test_default_block_m_16bit_rows_at_least_1p5x_f32():
+    """Acceptance: dropping the unconditional f32 VMEM copy buys 16-bit
+    dtypes >= 1.5x larger row tiles at n=4096."""
+    m = 1 << 16
+    bm_f32 = default_block_m(4096, m, jnp.float32,
+                             compute_dtype=jnp.float32)
+    for dt in (jnp.bfloat16, jnp.float16):
+        bm16 = default_block_m(4096, m, dt, compute_dtype=dt)
+        assert bm16 >= 1.5 * bm_f32, (bm16, bm_f32)
+
+
+def test_default_block_m_charges_epilogue_outputs():
+    """The fused kernels' q tile + per-row scales are charged: the tile
+    fits the documented 8 MiB budget for every epilogue form."""
+    budget = 8 * 1024 * 1024
+    m = 1 << 16
+    for n in (4096, 16384, 32768):
+        for epi in (None, QuantEpilogue("int8"),
+                    QuantEpilogue("fp8_e4m3", dequant=True)):
+            bm = default_block_m(n, m, jnp.float32,
+                                 compute_dtype=jnp.float32, epilogue=epi)
+            out_b = 4 if (epi is None or epi.dequant) else 1
+            resident = bm * n * (4 + 4 + out_b) + (0 if epi is None else bm * 4)
+            assert resident <= budget + n * 16  # one-row rounding slack
+
+
+def test_bf16_compute_error_bound_vs_f32():
+    """Appendix C mirror: native bf16 passes track the f32-compute
+    transform within a small relative bound -- and differ from it
+    (proving the low-precision path is actually taken)."""
+    x = _x((32, 4096), seed=16, dtype=jnp.bfloat16)
+    y16 = hadamard(x, plan_for(4096, dtype=jnp.bfloat16, backend="pallas"))
+    y32 = hadamard(x, plan_for(4096, dtype=jnp.bfloat16, backend="pallas",
+                               compute_dtype=jnp.float32))
+    a16 = np.asarray(y16, np.float32)
+    a32 = np.asarray(y32, np.float32)
+    rel = np.abs(a16 - a32).max() / np.abs(a32).max()
+    assert 0 < rel < 2e-2, rel
+    # and the bf16 result still matches the exact rotation to bf16 accuracy
+    want = np.asarray(hadamard(x.astype(jnp.float32)), np.float32)
+    assert np.abs(a16 - want).max() / np.abs(want).max() < 2e-2
+
+
+def test_quant_dot_bf16_no_retrace_and_correct():
+    cfg = QuantConfig(mode="int8", rotate="hadamard", backend="pallas")
+    x = _x((8, 512), seed=17, dtype=jnp.bfloat16)
+    w = _x((512, 64), seed=18, dtype=jnp.bfloat16) * 0.1
+    out = rotated_quant_dot(x, w, cfg)
+    assert out.dtype == jnp.bfloat16
+    key = ("pallas", "quant_dot")
+    before = registry.TRACE_COUNTS[key]
+    rotated_quant_dot(_x((8, 512), seed=19, dtype=jnp.bfloat16), w, cfg)
+    assert registry.TRACE_COUNTS[key] == before
+
+
+# ------------------------------------------------------------ MoE path
+def test_rotated_quant_dot_experts_matches_per_expert_quant_dot():
+    cfg = QuantConfig(mode="int8", rotate="hadamard", backend="pallas")
+    x = _x((2, 3, 4, 256), seed=20)          # (B, E, cap, f)
+    w = _x((3, 256, 64), seed=21) * 0.1      # (E, f, d)
+    out = rotated_quant_dot_experts(x, w, cfg)
+    assert out.shape == (2, 3, 4, 64)
+    for e in range(3):
+        want = quant_dot(x[:, e], w[e], mode="int8", backend="pallas")
+        np.testing.assert_allclose(np.asarray(out[:, e]), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+    ge = jax.grad(lambda ww: jnp.sum(
+        rotated_quant_dot_experts(x, ww, cfg) ** 2))(w)
+    assert bool(jnp.isfinite(ge).all()) and float(jnp.abs(ge).max()) > 0
+
+
+# ---------------------------------------------------------------- shims
+def test_deprecation_shims_warn_once():
+    from repro.kernels import fused_quant, ops
+
+    for mod, call in (
+        (ops, lambda: ops.hadamard(_x((2, 128)))),
+        (fused_quant,
+         lambda: fused_quant.fused_hadamard_quantize(_x((2, 128)))),
+    ):
+        mod._warned = False
+        with pytest.warns(DeprecationWarning):
+            call()
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")  # second call must stay silent
+            call()
