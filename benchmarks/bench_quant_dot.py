@@ -54,7 +54,8 @@ def run(csv: List[str], smoke: bool = False, records: Optional[List] = None):
         w = jnp.asarray(rng.standard_normal((n, d)) * 0.05, jnp.float32)
         for mode in modes:
             plan = plan_for(n, backend="pallas", epilogue=QuantEpilogue(mode))
-            wq, sw = quantize_weight(w, mode)
+            qt = quantize_weight(w, mode)          # QTensor (pytree: jits)
+            wq, sw = qt.q, qt.scale
             fused_fn = jax.jit(lambda a, q, s, p=plan: quant_dot(a, (q, s), p))
 
             def unfused(a, q, s, p=plan, m=mode):

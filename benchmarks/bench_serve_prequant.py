@@ -1,0 +1,87 @@
+"""Pre-quantized serving weights (QTensor) vs per-forward weight
+quantization -- the PR 4 serving-path claim, measured.
+
+Both paths run the SAME rotate -> per-token-quantize -> low-precision
+contraction (``core.api.quant_dot``); the delta is what happens to the
+weight every step:
+
+  * ``per_forward``: the raw f32 weight is absmax-reduced, scaled,
+    rounded, and cast per out-channel INSIDE the jitted forward -- the
+    pre-PR-4 serving behavior (plus 4x the weight HBM read: f32 vs the
+    1-byte storage grid).
+  * ``prequant``: the weight was quantized ONCE at load into a
+    :class:`repro.core.wquant.QTensor`; the forward contracts against
+    ``q``/``scale`` directly (zero quantize_weight work per step).
+
+The analytic HBM delta alone is 4x on the weight bytes (f32 in vs int8
+in); the measured delta adds the absmax reduction + round/cast removal.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import QuantDotSpec
+from repro.core.quant import QuantConfig
+from repro.core.wquant import quantize_weight
+
+
+def _time(fn, *args, iters: int = 5) -> float:
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e3  # ms
+
+
+def run(csv: List[str], smoke: bool = False, records: Optional[List] = None):
+    rng = np.random.default_rng(0)
+    sizes = ((1024, 512),) if smoke else ((1024, 512), (4096, 1024))
+    rows = 64 if smoke else 256
+    modes = ("int8",) if smoke else ("int8", "fp8_e4m3")
+    cfg = dict(rotate="hadamard", backend="pallas")
+    for n, d in sizes:
+        x = jnp.asarray(rng.standard_normal((rows, n)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((n, d)) * 0.05, jnp.float32)
+        for mode in modes:
+            spec = QuantDotSpec.for_config(
+                n, QuantConfig(mode=mode, **cfg))
+            qt = quantize_weight(w, mode)          # once, at "load"
+
+            per_forward = jax.jit(lambda a, ww, s=spec: s.bind(ww)(a))
+            prequant = jax.jit(
+                lambda a, q, sc, s=spec, m=mode:
+                s.bind(type(qt)(q=q, scale=sc, mode=m))(a))
+
+            t_raw = _time(per_forward, x, w)
+            t_pre = _time(prequant, x, qt.q, qt.scale)
+            err = float(jnp.abs(per_forward(x, w)
+                                - prequant(x, qt.q, qt.scale)).max())
+            qb = jnp.dtype(qt.q.dtype).itemsize
+            # weight bytes entering the step: raw f32 vs storage grid
+            b_raw = n * d * 4
+            b_pre = n * d * qb + d * 4
+            csv.append(
+                f"serve_prequant,n={n},d={d},mode={mode},"
+                f"per_forward_ms={t_raw:.2f},prequant_ms={t_pre:.2f},"
+                f"speedup={t_raw / max(t_pre, 1e-9):.2f}x,"
+                f"weight_bytes_per_step={b_raw}->{b_pre},"
+                f"max_abs_err={err:.2e}")
+            if records is not None:
+                shape = f"{rows}x{n}x{d}"
+                act = rows * n * 4 + rows * d * 4
+                for backend, ms, byt in (
+                        ("per_forward_wquant", t_raw, b_raw + act),
+                        ("prequant_qtensor", t_pre, b_pre + act)):
+                    records.append({
+                        "bench": f"serve_prequant_{mode}", "shape": shape,
+                        "dtype": "float32", "backend": backend,
+                        "ms": round(ms, 4),
+                        "gbps": round(byt / (ms * 1e-3) / 1e9, 3),
+                    })
+    return csv

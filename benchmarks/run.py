@@ -5,6 +5,8 @@
   bench_e2e_overhead    -- section 1 rotation-overhead motivation
   bench_fused_quant     -- conclusion's future-work fusion (beyond paper)
   bench_quant_dot       -- fused rotate+quantize+GEMM consumer (PR 3)
+  bench_serve_prequant  -- pre-quantized QTensor weights vs per-forward
+                           weight quantization on the serving path (PR 4)
 
 Prints ``name,key=value,...`` CSV lines; ``--only <name>`` runs a subset.
 ``--json PATH`` additionally writes machine-readable records
@@ -37,6 +39,7 @@ def main() -> None:
         bench_hadamard,
         bench_quant_accuracy,
         bench_quant_dot,
+        bench_serve_prequant,
     )
 
     suites = {
@@ -45,6 +48,7 @@ def main() -> None:
         "e2e_overhead": bench_e2e_overhead.run,
         "fused_quant": bench_fused_quant.run,
         "quant_dot": bench_quant_dot.run,
+        "serve_prequant": bench_serve_prequant.run,
     }
     csv, records = [], []
     for name, fn in suites.items():

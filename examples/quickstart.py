@@ -1,27 +1,35 @@
 """Quickstart: the HadaCore Hadamard transform and rotation-quantization.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py            # full sizes
+    PYTHONPATH=src python examples/quickstart.py --smoke    # CI-sized
 """
 import math
+import sys
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.api import QuantEpilogue, hadamard, plan_for
+from repro.core.api import QuantDotSpec, QuantEpilogue, hadamard, plan_for
 from repro.core.hadamard import hadamard_transform
-from repro.core.quant import QuantConfig, quant_dot
-from repro.core.rotations import fuse_rotation_lhs, online_hadamard, rotation_matrix
+from repro.core.quant import QuantConfig
+from repro.core.rotations import fuse_rotation_lhs, rotation_matrix
+from repro.core import wquant
 from repro.kernels.hadacore import hadacore
-from repro.kernels.ref import fwht, hadamard_matrix
+from repro.kernels.ref import fwht
+
+SMOKE = "--smoke" in sys.argv
+N = 512 if SMOKE else 4096          # transform size
+D = 128 if SMOKE else 512           # matmul out-channels
+ROWS = 16 if SMOKE else 64
 
 rng = np.random.default_rng(0)
 
 # 1. The transform itself: three equivalent implementations -------------
-x = jnp.asarray(rng.standard_normal((8, 4096)), dtype=jnp.float32)
+x = jnp.asarray(rng.standard_normal((8, N)), dtype=jnp.float32)
 y_kernel = hadacore(x)                      # Pallas TPU kernel (interpret on CPU)
 y_xla = hadamard_transform(x)               # MXU-factored pure JAX
-y_ref = fwht(x, scale=1 / math.sqrt(4096))  # the paper's Listing-1 oracle
+y_ref = fwht(x, scale=1 / math.sqrt(N))     # the paper's Listing-1 oracle
 print("kernel vs oracle max err:",
       float(jnp.abs(y_kernel - y_ref).max()))
 print("xla    vs oracle max err:",
@@ -29,8 +37,8 @@ print("xla    vs oracle max err:",
 
 # 2. The unified API: one entry point, plans cached per shape -----------
 # hadamard(x) builds (and caches) a plan keyed on (n, dtype, backend,
-# epilogue, scale); prebuild one to pin every decision for a hot path.
-plan = plan_for(4096, backend="pallas")
+# epilogue, scale, mesh axes); prebuild one to pin every decision.
+plan = plan_for(N, backend="pallas")
 print("plan:", f"n={plan.n} backend={plan.backend} passes={plan.num_passes}")
 print("plan vs oracle max err:", float(jnp.abs(hadamard(x, plan) - y_ref).max()))
 
@@ -47,21 +55,38 @@ print("fused fp8_e4m3:", qf.dtype,
       "dequant err:", float(jnp.abs(qf.astype(jnp.float32) * sf - y_ref).max()))
 
 # 3. Why LLM quantization wants it: outlier smearing --------------------
-acts = rng.standard_normal((64, 4096)).astype(np.float32)
+acts = rng.standard_normal((ROWS, N)).astype(np.float32)
 acts[:, 17] *= 80.0                          # one outlier channel
 rot = np.asarray(hadamard(jnp.asarray(acts)))
 print(f"abs-max before rotation: {np.abs(acts).max():8.1f}  "
       f"after: {np.abs(rot).max():8.1f}")
 
-# 4. INT8 matmul error with offline-fused weight rotation ---------------
-w = (rng.standard_normal((4096, 512)) * 0.02).astype(np.float32)
-ref = acts @ w
-cfg = QuantConfig(mode="int8")
-cfg_rot = QuantConfig(mode="int8", rotate="hadamard", backend="xla")
-Q = rotation_matrix(4096)
-err0 = float(np.abs(np.asarray(quant_dot(jnp.asarray(acts), jnp.asarray(w), cfg)) - ref).mean())
-xr = online_hadamard(jnp.asarray(acts), cfg_rot)
-wr = fuse_rotation_lhs(jnp.asarray(w), Q)
-err1 = float(np.abs(np.asarray(quant_dot(xr, wr, cfg_rot)) - ref).mean())
+# 4. The declarative consumer site: QuantDotSpec + QTensor --------------
+# Declare the rotation-consumer once (size, mode, sharding axes), then
+# bind weights: a raw weight quantizes on the fly (training), a
+# pre-quantized QTensor is consumed directly (serving).
+w = jnp.asarray(rng.standard_normal((N, D)) * 0.02, jnp.float32)
+spec = QuantDotSpec.for_config(
+    N, QuantConfig(mode="int8", rotate="hadamard", backend="pallas"),
+    weight_axes=("dff", "fsdp"))
+y_train = spec.bind(w)(jnp.asarray(acts))          # on-the-fly weight quant
+
+qt = wquant.quantize_weight(w, "int8")             # ONCE, at load time
+print("QTensor:", qt.q.dtype, qt.q.shape, "scales:", qt.scale.shape,
+      "mode:", qt.mode)
+wquant.reset_quantize_weight_calls()
+y_serve = spec.bind(qt)(jnp.asarray(acts))         # zero per-forward quant
+print("serving bind quantize_weight calls:", wquant.QUANTIZE_WEIGHT_CALLS,
+      " train-vs-serve bitwise:",
+      bool((np.asarray(y_train) == np.asarray(y_serve)).all()))
+
+# 5. Why rotation helps the int8 grid: offline weight fusion ------------
+ref = acts @ np.asarray(w)
+spec_plain = QuantDotSpec.for_config(
+    N, QuantConfig(mode="int8", backend="xla"))    # quantize, no rotation
+Q = rotation_matrix(N)
+wr = fuse_rotation_lhs(w, Q)                       # W <- Q^T W (offline, free)
+err0 = float(np.abs(np.asarray(spec_plain.bind(w)(jnp.asarray(acts))) - ref).mean())
+err1 = float(np.abs(np.asarray(spec.bind(wr)(jnp.asarray(acts))) - ref).mean())
 print(f"int8 matmul error: plain {err0:.4f} -> rotated {err1:.4f} "
-      f"({err0/err1:.1f}x better)")
+      f"({err0 / err1:.1f}x better)")

@@ -1,13 +1,28 @@
 """Serve a small model with batched requests and the paper's FP8 +
-Hadamard-rotation KV-cache path (prefill -> decode loop).
+Hadamard-rotation KV-cache path (prefill -> decode loop), end to end on
+the PR 4 serving stack: weights are pre-quantized ONCE at load into
+``QTensor`` leaves (``--prequant``, on by default when quantizing), so
+the jitted forward contracts the rotated activations against int8/fp8
+weights directly -- zero per-forward weight quantization.
 
-    PYTHONPATH=src python examples/serve_quantized.py
+    PYTHONPATH=src python examples/serve_quantized.py            # full demo
+    PYTHONPATH=src python examples/serve_quantized.py --smoke    # CI-sized
 """
+import sys
+
 from repro.launch.serve import main as serve_main
 
 if __name__ == "__main__":
-    serve_main([
-        "--arch", "llama3-8b", "--scale", "0.05",
-        "--batch", "8", "--prompt-len", "128", "--gen", "32",
-        "--quant", "fp8_e4m3", "--rotate", "hadamard",
-    ])
+    smoke = "--smoke" in sys.argv
+    args = ["--arch", "llama3-8b",
+            "--quant", "fp8_e4m3", "--rotate", "hadamard",
+            "--prequant"]
+    if smoke:
+        # tiny shapes: CPU interpret-mode guard that the pre-quantized
+        # QTensor serving path keeps running, not a measurement
+        args += ["--scale", "0.005", "--batch", "2",
+                 "--prompt-len", "16", "--gen", "4"]
+    else:
+        args += ["--scale", "0.05", "--batch", "8",
+                 "--prompt-len", "128", "--gen", "32"]
+    serve_main(args)

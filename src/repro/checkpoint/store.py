@@ -12,6 +12,13 @@ Design points for 1000+-node deployments (scaled to this container):
   * A checkpoint is only valid once its ``.done`` marker exists; restore
     picks the newest valid step, so a mid-write crash falls back to the
     previous checkpoint.
+  * Quantized-weight trees serialize transparently: ``wquant.QTensor`` is
+    a registered pytree node, so its ``q``/``scale`` children flatten to
+    ordinary leaves (fp8/int8 storage written via the raw-uint view) and
+    a restore onto a QTensor template rebuilds the nodes with their
+    static mode/axes metadata from the template. Legacy pre-QTensor
+    checkpoints ({'wq','ws'} dicts) restore onto QTensor templates
+    unchanged -- both flatten to the same (values, scales) leaf order.
 """
 from __future__ import annotations
 
@@ -102,6 +109,15 @@ def restore_checkpoint(ckpt_dir: str, step: int, template: Any,
     of NamedSharding) re-shards for the *current* mesh -- the elastic path."""
     out = os.path.join(ckpt_dir, f"step_{step:09d}")
     flat_t, treedef = jax.tree.flatten(template)
+    with open(os.path.join(out, "tree.json")) as f:
+        manifest = json.load(f)
+    if len(manifest["leaves"]) != len(flat_t):
+        raise ValueError(
+            f"checkpoint at {out} has {len(manifest['leaves'])} leaves but "
+            f"the restore template flattens to {len(flat_t)} -- the saved "
+            "tree structure does not match (e.g. restoring a raw-weight "
+            "checkpoint onto a QTensor template or vice versa: re-run "
+            "quantize_lm_weights on the restored raw tree instead)")
     arrs = [_from_numpy(np.load(os.path.join(out, f"arr_{i}.npy")), t.dtype)
             for i, t in enumerate(flat_t)]
     if shardings is not None:

@@ -65,10 +65,13 @@ from repro.kernels.registry import QSPECS, get_backend, select_backend
 __all__ = [
     "QuantEpilogue",
     "HadamardPlan",
+    "QuantDotSpec",
+    "RotationSpec",
     "plan_for",
     "make_plan",
     "hadamard",
     "quant_dot",
+    "quant_dot_experts",
     "plan_cache_info",
 ]
 
@@ -118,6 +121,12 @@ class HadamardPlan:
     block_m: Optional[int]           # VMEM row tile (None = per-call heuristic)
     k: int                           # number of 128-factors of p
     r: int                           # residual pow2 factor (1 <= r < 128)
+    mesh_axes: Optional[Tuple[str, ...]] = None
+                                     # mesh axes the quant_dot weight's
+                                     # out-channel dim is sharded over --
+                                     # part of the cache key, so plans
+                                     # built under different meshes never
+                                     # alias; None = single-device plan
     mats: np.ndarray = dataclasses.field(repr=False, compare=False, default=None)
 
     @property
@@ -131,7 +140,7 @@ class HadamardPlan:
 
 @functools.lru_cache(maxsize=None)
 def _build_plan(n, p, dtype_name, compute_dtype, scale_val, backend, epilogue,
-                block_m):
+                block_m, mesh_axes=None):
     if p == 1:
         k, r, mats = 0, 1, np.ones((1, 1, 1), np.float32)
     else:
@@ -140,7 +149,7 @@ def _build_plan(n, p, dtype_name, compute_dtype, scale_val, backend, epilogue,
     return HadamardPlan(
         n=n, p=p, dtype=dtype_name, compute_dtype=compute_dtype,
         backend=backend, scale=scale_val, epilogue=epilogue, block_m=block_m,
-        k=k, r=r, mats=mats,
+        k=k, r=r, mesh_axes=mesh_axes, mats=mats,
     )
 
 
@@ -153,6 +162,7 @@ def plan_for(
     epilogue: Optional[QuantEpilogue] = None,
     block_m: Optional[int] = None,
     compute_dtype: Any = None,
+    mesh_axes: Optional[Tuple[str, ...]] = None,
 ) -> HadamardPlan:
     """Build (or fetch from the cache) the plan for an n-point transform.
 
@@ -161,9 +171,11 @@ def plan_for(
     of-2 ``n`` plans the grouped transform on the largest power-of-2
     divisor. ``compute_dtype=None`` resolves the dtype the matmul passes
     run in: native bf16/fp16 passes with f32 MXU accumulation for 16-bit
-    inputs, f32 otherwise (explicitly overridable). Repeated calls with
-    the same key return the *same* plan object, so downstream jit caches
-    hit.
+    inputs, f32 otherwise (explicitly overridable). ``mesh_axes`` marks
+    a quant_dot plan as sharded over those mesh axes (the out-channel dim
+    of the weight); it is part of the cache key, so plans built under a
+    mesh never alias single-device plans. Repeated calls with the same
+    key return the *same* plan object, so downstream jit caches hit.
     """
     if n < 1:
         raise ValueError(f"Hadamard size must be >= 1, got {n}")
@@ -173,7 +185,7 @@ def plan_for(
     return _build_plan(
         n, p, jnp.dtype(dtype).name,
         resolve_compute_dtype(dtype, compute_dtype), scale_val, resolved,
-        epilogue, block_m
+        epilogue, block_m, mesh_axes
     )
 
 
@@ -187,8 +199,9 @@ def plan_cache_info():
 
 
 def _strip(plan: HadamardPlan) -> HadamardPlan:
-    """The epilogue-free twin of a plan (used by fallbacks and pullbacks)."""
-    if plan.epilogue is None:
+    """The epilogue-free twin of a plan (used by fallbacks and pullbacks).
+    Mesh axes are dropped too: the plain transform never shards."""
+    if plan.epilogue is None and plan.mesh_axes is None:
         return plan
     return _build_plan(
         plan.n, plan.p, plan.dtype, plan.compute_dtype, plan.scale,
@@ -402,13 +415,95 @@ def _qd_fusable(plan: HadamardPlan) -> bool:
     )
 
 
+def _resolve_mesh_axes(weight_axes, d: Optional[int]):
+    """Resolve a weight's logical out-channel axis -> concrete mesh axes
+    for the sharded quant_dot dispatch. Returns None (single-device plan)
+    when no mesh is active, the logical axis maps to nothing, the mapped
+    axes' total size is 1, or ``d`` is not divisible by it (the same
+    divisibility guard ``distributed.sharding.constrain`` applies)."""
+    if not weight_axes or d is None:
+        return None
+    from repro.distributed.sharding import _resolve_axis, current_mesh
+
+    mesh = current_mesh()
+    if mesh is None:
+        return None
+    ax = _resolve_axis(mesh, weight_axes[-1])
+    if ax is None:
+        return None
+    axes = (ax,) if isinstance(ax, str) else tuple(ax)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    total = 1
+    for a in axes:
+        total *= sizes[a]
+    if total <= 1 or d % total:
+        return None
+    return axes
+
+
+def _sharded_quant_dot(x, wq, sw, plan: HadamardPlan, interpret: bool):
+    """quant_dot over a mesh via ``shard_map``: every shard rotates the
+    full row block (the contraction axis is never split -- the Hadamard
+    spans it) and contracts against ITS slice of the weight with ITS
+    slice of the per-out-channel scales, so per-shard weight scales are
+    used end to end and the concatenated result is bitwise the
+    single-device int8 output. The xla backend is the shard-local oracle
+    (every op a reshape/dot -- the pjit-shardable path). Returns None
+    when the plan's mesh is not the current one (caller falls back).
+
+    Tradeoffs (deliberate for this first sharded cut; ROADMAP follow-on):
+    rows are replicated across the sharded axis (in_spec P(None, None)),
+    so each shard redoes the rotate+quantize of the full row block --
+    correct by construction, but row work is not data-parallel inside
+    this op; and the shard-local compute is the unfused oracle rather
+    than the fused pallas kernel. Row-sharding over the data axes plus a
+    shard-local fused kernel is the next step on this seam."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import current_mesh
+    from repro.kernels.quant_dot import epilogue_dot
+
+    mesh = current_mesh()
+    if mesh is None or any(a not in mesh.axis_names for a in plan.mesh_axes):
+        return None
+    spec_d = plan.mesh_axes if len(plan.mesh_axes) > 1 else plan.mesh_axes[0]
+    local_plan = _build_plan(
+        plan.n, plan.p, plan.dtype, plan.compute_dtype, plan.scale,
+        "xla", plan.epilogue, plan.block_m)
+    epi = plan.epilogue
+    lead, d = x.shape[:-1], wq.shape[-1]
+    x2 = x.reshape(-1, plan.n)
+    sw2 = sw.reshape(1, d).astype(jnp.float32)
+
+    def local(xl, wl, sl):
+        # the unfused oracle, shard-local: factored rotate (grouped sizes
+        # included), per-token quantize of the FULL row, then the shared
+        # epilogue-dot contraction against this shard's weight columns
+        y = _dispatch_transform(xl, _strip(local_plan), interpret)
+        q, s = registry._quantize_rows(y.astype(jnp.float32), epi.mode)
+        return epilogue_dot(q, s, wl, sl, epi.mode, jnp.dtype(plan.dtype))
+
+    out = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(None, None), P(None, spec_d), P(None, spec_d)),
+        out_specs=P(None, spec_d), check_rep=False,
+    )(x2, wq, sw2)
+    return out.reshape(*lead, d)
+
+
 def _dispatch_quant_dot(x, wq, sw, plan: HadamardPlan, interpret: bool):
     """rotate(x) -> per-token quantize -> contract against the offline-
     quantized weight (int8 w/ int32 accumulation, fp8 w/ f32), applying
-    ``scale_x * scale_w`` in the epilogue. Fused single-kernel when the
-    plan supports it; otherwise the unfused oracle semantics (grouped
-    transforms, per-tensor scales, backends without the kernel -- the
-    pjit-shardable fallback)."""
+    ``scale_x * scale_w`` in the epilogue. Mesh plans dispatch through
+    shard_map over the weight's out-channel shards; fused single-kernel
+    when the plan supports it; otherwise the unfused oracle semantics
+    (grouped transforms, per-tensor scales, backends without the kernel
+    -- the pjit-shardable fallback)."""
+    if plan.mesh_axes and wq.ndim == 2 and plan.epilogue.per_token:
+        out = _sharded_quant_dot(x, wq, sw, plan, interpret)
+        if out is not None:
+            return out
     if _qd_fusable(plan):
         return get_backend(plan.backend).quant_dot(x, wq, sw, plan, interpret)
     from repro.kernels.quant_dot import epilogue_dot
@@ -460,8 +555,8 @@ _quant_dot_qw.defvjp(_quant_dot_qw_fwd, _quant_dot_qw_bwd)
 def _quant_dot_w_impl(x, w, plan: HadamardPlan, interpret: bool):
     from repro.core.wquant import quantize_weight
 
-    wq, sw = quantize_weight(w, plan.epilogue.mode)
-    return _dispatch_quant_dot(x, wq, sw, plan, interpret)
+    qt = quantize_weight(w, plan.epilogue.mode)
+    return _dispatch_quant_dot(x, qt.q, qt.scale, plan, interpret)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
@@ -496,7 +591,7 @@ _quant_dot_w.defvjp(_quant_dot_w_fwd, _quant_dot_w_bwd)
 
 def quant_dot(
     x: jnp.ndarray,
-    w: Union[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]],
+    w: Union[jnp.ndarray, "QTensor", Tuple[jnp.ndarray, jnp.ndarray]],
     plan: Optional[HadamardPlan] = None,
     *,
     mode: str = _UNSET,
@@ -504,6 +599,7 @@ def quant_dot(
     backend: Optional[str] = _UNSET,
     block_m: Optional[int] = _UNSET,
     compute_dtype: Any = _UNSET,
+    weight_axes: Optional[Tuple] = _UNSET,
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     """``quantize(hadamard(x)) @ quantize(w)`` as ONE fused consumer path.
@@ -517,17 +613,30 @@ def quant_dot(
 
     ``w`` is either the full-precision weight ``(n, d)`` (quantized per
     out-channel on the fly; differentiable in both operands via the
-    straight-through estimator) or a pre-quantized ``(wq, sw)`` pair from
-    :func:`repro.core.wquant.quantize_weight` (the serving form;
-    differentiable in ``x`` only).
+    straight-through estimator) or a pre-quantized
+    :class:`repro.core.wquant.QTensor` (legacy ``(wq, sw)`` tuples are
+    still accepted) from :func:`repro.core.wquant.quantize_weight` -- the
+    serving form; differentiable in ``x`` only.
+
+    ``weight_axes`` (the weight's logical sharding axes, e.g.
+    ``("dff", "fsdp")``) makes the call mesh-aware: under an active
+    sharding-rules mesh the out-channel axis resolves to concrete mesh
+    axes, the plan is keyed on them, and dispatch goes through
+    ``shard_map`` with per-shard weight scales (the xla backend as the
+    shard-local oracle). Without a mesh this is a no-op.
 
     Plans must carry a non-dequant :class:`QuantEpilogue`; ``plan=None``
     builds one from ``mode`` (default ``"int8"``). Grouped (non-power-of-
     2) sizes and per-tensor scales fall back to the unfused oracle
     semantics -- same math, separate XLA ops, pjit-shardable.
     """
+    from repro.core.wquant import QTensor
+
     n = x.shape[-1]
+    if isinstance(w, QTensor):
+        w = (w.q, w.scale)
     if plan is None:
+        d_out = w[0].shape[-1] if isinstance(w, tuple) else w.shape[-1]
         plan = plan_for(
             n, dtype=x.dtype,
             scale="ortho" if scale is _UNSET else scale,
@@ -535,12 +644,15 @@ def quant_dot(
             epilogue=QuantEpilogue("int8" if mode is _UNSET else mode),
             block_m=None if block_m is _UNSET else block_m,
             compute_dtype=None if compute_dtype is _UNSET else compute_dtype,
+            mesh_axes=_resolve_mesh_axes(
+                None if weight_axes is _UNSET else weight_axes, d_out),
         )
     else:
         passed = [name for name, v in (("mode", mode), ("scale", scale),
                                        ("backend", backend),
                                        ("block_m", block_m),
-                                       ("compute_dtype", compute_dtype))
+                                       ("compute_dtype", compute_dtype),
+                                       ("weight_axes", weight_axes))
                   if v is not _UNSET]
         if passed:
             raise ValueError(
@@ -581,3 +693,353 @@ def quant_dot(
         raise ValueError(
             f"weight has contraction dim {w.shape[0]}, expected {n}")
     return _quant_dot_w(x, w, plan, interpret)
+
+
+# ------------------------------------------------ expert (einsum) consumers
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _quant_dot_experts_qw(x, wq, sw, plan: HadamardPlan, interpret: bool):
+    """Serving einsum form for stacked expert weights: the activation side
+    is the fused rotate+quantize kernel ((q, scales) epilogue); the
+    contraction runs on the real low-precision grids per expert against
+    PRE-quantized weights -- zero per-forward weight quantization. The
+    scales factor out of the einsum exactly (s per token row, sw per
+    (expert, out-channel)). Differentiable in x only (STE)."""
+    q, s = hadamard(x, plan, interpret=interpret)
+    if QSPECS[plan.epilogue.mode][2]:
+        acc = jnp.einsum("becf,efd->becd", q.astype(jnp.int8),
+                         wq.astype(jnp.int8),
+                         preferred_element_type=jnp.int32
+                         ).astype(jnp.float32)
+    else:
+        acc = jnp.einsum("becf,efd->becd",
+                         q.astype(jnp.bfloat16), wq.astype(jnp.bfloat16),
+                         preferred_element_type=jnp.float32)
+    out = acc * s * sw[None]                            # (B,E,c,d)*(1,E,1,d)
+    return out.astype(x.dtype)
+
+
+def _qd_experts_qw_fwd(x, wq, sw, plan, interpret):
+    return _quant_dot_experts_qw(x, wq, sw, plan, interpret), (wq, sw)
+
+
+def _qd_experts_qw_bwd(plan, interpret, res, g):
+    # STE: out ~= had(x) @ W per expert with W = dequant(wq, sw); the
+    # quantized weight and its scales are statistics with zero pullback.
+    wq, sw = res
+    W = wq.astype(jnp.float32) * sw                     # (E, f, d)
+    gf = g.astype(jnp.float32)
+    gy = jnp.einsum("becd,efd->becf", gf, W)
+    gx = _dispatch_transform(
+        gy.astype(jnp.dtype(plan.dtype)), _strip(plan), interpret)
+    return gx, _zero_cotangent(wq), _zero_cotangent(sw)
+
+
+_quant_dot_experts_qw.defvjp(_qd_experts_qw_fwd, _qd_experts_qw_bwd)
+
+
+def _quant_dot_experts_w_impl(x, w, plan, interpret):
+    from repro.core.wquant import quantize_weight
+
+    qt = quantize_weight(w, plan.epilogue.mode)         # (E,f,d), (E,1,d)
+    return _quant_dot_experts_qw(x, qt.q, qt.scale, plan, interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _quant_dot_experts_w(x, w, plan: HadamardPlan, interpret: bool):
+    """Training einsum form: full-precision expert weights, quantized per
+    (expert, out-channel) on the fly. STE through BOTH quantizations."""
+    return _quant_dot_experts_w_impl(x, w, plan, interpret)
+
+
+def _qd_experts_w_fwd(x, w, plan, interpret):
+    return _quant_dot_experts_w_impl(x, w, plan, interpret), (x, w)
+
+
+def _qd_experts_w_bwd(plan, interpret, res, g):
+    x, w = res
+    stripped = _strip(plan)
+    gf = g.astype(jnp.float32)
+    gy = jnp.einsum("becd,efd->becf", gf, w.astype(jnp.float32))
+    gx = hadamard(gy.astype(x.dtype), stripped, interpret=interpret)
+    y = hadamard(x, stripped, interpret=interpret)
+    gw = jnp.einsum("becf,becd->efd", y.astype(jnp.float32), gf)
+    return gx, gw.astype(w.dtype)
+
+
+_quant_dot_experts_w.defvjp(_qd_experts_w_fwd, _qd_experts_w_bwd)
+
+
+def quant_dot_experts(x, w, plan: HadamardPlan,
+                      interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Per-expert quant_dot: ``einsum('becf,efd->becd')`` with the shared
+    online Hadamard on the dispatched activations (ONE fused
+    rotate+quantize kernel -- all experts share d_ff) and real int8/fp8
+    expert weights with per-(expert, out-channel) scales. ``w`` is the
+    raw (E, f, d) weight (training; STE in both operands) or a
+    pre-quantized QTensor (serving; x-only gradients)."""
+    from repro.core.wquant import QTensor
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if isinstance(w, QTensor):
+        return _quant_dot_experts_qw(x, w.q, w.scale, plan, interpret)
+    return _quant_dot_experts_w(x, w, plan, interpret)
+
+
+# --------------------------------------------- declarative rotation sites
+def _cfg_backend_name(backend: str) -> Optional[str]:
+    # "auto" defers to the registry (env override, then size/platform).
+    return None if backend == "auto" else backend
+
+
+@dataclasses.dataclass(frozen=True)
+class RotationSpec:
+    """A declarative activation-only rotation site (DESIGN.md section 7):
+    the attention Q/K/V pre-quantization hook, built once from the model
+    config instead of threading a ``QuantConfig`` into free functions.
+
+    n:         transform size (the per-head dim at the QK sites)
+    mode:      'none' (no quantization) | 'int8' | 'fp8_e4m3' | 'fp8_e5m2'
+    rotate:    apply the online Hadamard (False = quantize-only site, the
+               V path: its rotation is fused offline into (W_v, W_o))
+    dequant:   return the fake-quantized tensor (the KV-cache form) --
+               ``(q, scales)`` when False
+    Calling the spec on a tensor dispatches through the cached plan: the
+    rotate+quantize site runs as ONE fused kernel when the plan fuses.
+    """
+
+    n: int
+    mode: str = "none"
+    rotate: bool = True
+    per_token: bool = True
+    dequant: bool = True
+    scale: Union[str, float, None] = "ortho"
+    backend: Optional[str] = None
+    block_m: Optional[int] = None
+    compute_dtype: Optional[str] = None
+
+    def __post_init__(self):
+        if self.mode != "none" and self.mode not in QSPECS:
+            raise ValueError(
+                f"unknown quantization mode {self.mode!r}; expected 'none' "
+                f"or one of {sorted(QSPECS)}")
+
+    @classmethod
+    def for_config(cls, n: int, cfg, *, rotate: Optional[bool] = None,
+                   quantize: Optional[bool] = None,
+                   per_token: bool = True) -> "RotationSpec":
+        """Build the spec a QuantConfig implies for an n-point site.
+        ``quantize`` defaults to the KV-site rule (cfg.enabled and
+        cfg.kv_quant); ``rotate`` defaults to cfg.rotating."""
+        q = (cfg.enabled and cfg.kv_quant) if quantize is None else \
+            (quantize and cfg.enabled)
+        return cls(
+            n=n, mode=cfg.mode if q else "none",
+            rotate=cfg.rotating if rotate is None else rotate,
+            per_token=per_token, backend=_cfg_backend_name(cfg.backend))
+
+    def plan(self, dtype) -> HadamardPlan:
+        epi = None
+        if self.mode != "none":
+            epi = QuantEpilogue(self.mode, per_token=self.per_token,
+                                dequant=self.dequant)
+        return plan_for(
+            self.n, dtype=dtype, scale=self.scale, backend=self.backend,
+            epilogue=epi, block_m=self.block_m,
+            compute_dtype=self.compute_dtype)
+
+    def __call__(self, x: jnp.ndarray, interpret: Optional[bool] = None):
+        if x.shape[-1] != self.n:
+            raise ValueError(
+                f"RotationSpec was built for n={self.n} but x has last "
+                f"axis {x.shape[-1]}")
+        if self.rotate:
+            return hadamard(x, self.plan(x.dtype), interpret=interpret)
+        if self.mode != "none":
+            from repro.core.quant import quantize
+
+            return quantize(x, self.mode,
+                            axis=-1 if self.per_token else None)
+        return x
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantDotSpec:
+    """A declarative rotation-CONSUMER site: ``x @ w`` with the online
+    Hadamard on x's contraction axis and low-precision operands, bound to
+    a concrete weight with ``spec.bind(w)`` (DESIGN.md section 7).
+
+    The spec pins everything about the site that is not the weight value:
+    transform size, quantization mode ('none' = unquantized matmul),
+    whether the site rotates, scale granularity, backend/tiling overrides,
+    and the weight's LOGICAL sharding axes -- which make the bound call
+    mesh-aware: under an active sharding-rules mesh the out-channel axis
+    resolves to mesh axes, folds into the plan cache key, and dispatch
+    goes through ``shard_map`` with per-shard weight scales.
+
+    ``bind`` accepts either the raw full-precision weight (training: the
+    weight is quantized per out-channel on the fly, differentiable in
+    both operands via the STE) or a pre-quantized
+    :class:`~repro.core.wquant.QTensor` (serving: the forward contracts
+    against ``q`` directly -- ZERO per-forward weight quantization).
+    """
+
+    n: int
+    mode: str = "int8"
+    rotate: bool = True
+    per_token: bool = True
+    scale: Union[str, float, None] = "ortho"
+    backend: Optional[str] = None
+    block_m: Optional[int] = None
+    compute_dtype: Optional[str] = None
+    weight_axes: Optional[Tuple[Optional[str], ...]] = None
+
+    def __post_init__(self):
+        if self.mode != "none" and self.mode not in QSPECS:
+            raise ValueError(
+                f"unknown quantization mode {self.mode!r}; expected 'none' "
+                f"or one of {sorted(QSPECS)}")
+
+    @classmethod
+    def for_config(cls, n: int, cfg, *,
+                   weight_axes: Optional[Tuple] = None) -> "QuantDotSpec":
+        """The spec a QuantConfig implies for an n-point consumer site."""
+        return cls(n=n, mode=cfg.mode, rotate=cfg.rotating,
+                   per_token=cfg.per_token,
+                   backend=_cfg_backend_name(cfg.backend),
+                   weight_axes=weight_axes)
+
+    @property
+    def quantizing(self) -> bool:
+        return self.mode != "none"
+
+    def plan(self, dtype, d: Optional[int] = None) -> HadamardPlan:
+        """The (cached) quant_dot plan for io dtype ``dtype`` and weight
+        out-channels ``d`` -- mesh axes resolved from the spec's logical
+        weight axes against the CURRENT mesh, so the same spec yields
+        distinct plan-cache entries on and off a mesh."""
+        return plan_for(
+            self.n, dtype=dtype, scale=self.scale, backend=self.backend,
+            epilogue=QuantEpilogue(self.mode, per_token=self.per_token),
+            block_m=self.block_m, compute_dtype=self.compute_dtype,
+            mesh_axes=_resolve_mesh_axes(self.weight_axes, d))
+
+    def _transform_plan(self, dtype) -> HadamardPlan:
+        return plan_for(self.n, dtype=dtype, scale=self.scale,
+                        backend=self.backend, block_m=self.block_m,
+                        compute_dtype=self.compute_dtype)
+
+    def _coerce_weight(self, w):
+        """Normalize the bound weight: QTensor passes through; a legacy
+        ``(wq, sw)`` pre-quantized tuple is wrapped into a QTensor in the
+        spec's mode (validating the storage dtype); raw arrays return
+        unchanged."""
+        from repro.core.wquant import QTensor
+
+        if isinstance(w, QTensor) or not isinstance(w, tuple):
+            return w
+        wq, sw = w
+        if self.quantizing:
+            want_dt = QSPECS[self.mode][1]
+            if wq.dtype != want_dt:
+                raise ValueError(
+                    f"pre-quantized weight dtype {wq.dtype.name} does not "
+                    f"match the spec's {self.mode!r} storage dtype "
+                    f"{jnp.dtype(want_dt).name}; quantize with "
+                    "wquant.quantize_weight(w, mode)")
+        return QTensor(q=wq, scale=sw, mode=self.mode)
+
+    # ------------------------------------------------------------- dense
+    def bind(self, w, *, interpret: Optional[bool] = None):
+        """Bind the site to a weight; returns ``fn(x) -> (..., d)``.
+        ``w``: raw array (training), QTensor, or legacy ``(wq, sw)``."""
+        from repro.core.wquant import QTensor
+
+        w = self._coerce_weight(w)
+        if isinstance(w, QTensor):
+            return functools.partial(self._apply_qtensor, w, interpret)
+        return functools.partial(self._apply_raw, w, interpret)
+
+    def __call__(self, x, w, *, interpret: Optional[bool] = None):
+        return self.bind(w, interpret=interpret)(x)
+
+    def _apply_qtensor(self, w, interpret, x):
+        if not self.quantizing or w.mode != self.mode:
+            # storage-only weight at a site whose config does not consume
+            # it natively: dequantize (NOT re-quantize) and run raw
+            return self._apply_raw(w.dequant(x.dtype), interpret, x)
+        if self.rotate:
+            if interpret is None:
+                interpret = jax.default_backend() != "tpu"
+            plan = self.plan(x.dtype, d=w.q.shape[-1])
+            return _quant_dot_qw(x, w.q, w.scale, plan, interpret)
+        # no rotation site: real quantized matmul, pre-quantized weight
+        from repro.kernels.quant_dot import epilogue_dot
+
+        q, s = registry._quantize_rows(
+            x.astype(jnp.float32), self.mode,
+            axis=-1 if self.per_token else None)
+        return epilogue_dot(q, s, w.q, w.scale, self.mode, x.dtype)
+
+    def _apply_raw(self, w, interpret, x):
+        if not self.quantizing:
+            if self.rotate:
+                return hadamard(x, self._transform_plan(x.dtype),
+                                interpret=interpret) @ w
+            return x @ w
+        if not self.rotate:
+            # no rotation insertion point: the plain fake-quant matmul
+            from repro.core.quant import QuantConfig
+            from repro.core.quant import quant_dot as _fake_quant_dot
+
+            return _fake_quant_dot(
+                x, w, QuantConfig(mode=self.mode, per_token=self.per_token))
+        plan = self.plan(x.dtype, d=w.shape[-1])
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        return _quant_dot_w(x, w, plan, interpret)
+
+    # ----------------------------------------------------------- experts
+    def bind_experts(self, w, *, interpret: Optional[bool] = None):
+        """Bind the MoE einsum form (``'becf,efd->becd'``, stacked expert
+        weights sharing one d_ff Hadamard); returns ``fn(x)``.
+
+        The expert path does not use the shard_map dispatch (3-D stacked
+        weights): its einsum is plain XLA and shards under GSPMD/pjit via
+        the surrounding constraints instead. ``weight_axes`` is carried
+        as declarative metadata only at this site today."""
+        from repro.core.wquant import QTensor
+
+        w = self._coerce_weight(w)
+        if isinstance(w, QTensor):
+            return functools.partial(self._apply_experts_qtensor, w,
+                                     interpret)
+        return functools.partial(self._apply_experts_raw, w, interpret)
+
+    def _apply_experts_qtensor(self, w, interpret, x):
+        if not self.quantizing or w.mode != self.mode:
+            return self._apply_experts_raw(w.dequant(x.dtype), interpret, x)
+        if self.rotate:
+            return quant_dot_experts(x, w, self.plan(x.dtype),
+                                     interpret=interpret)
+        from repro.core.quant import quantize
+
+        xq = quantize(x, self.mode, axis=-1 if self.per_token else None)
+        return jnp.einsum("becf,efd->becd", xq,
+                          w.dequant(x.dtype)).astype(x.dtype)
+
+    def _apply_experts_raw(self, w, interpret, x):
+        if not self.quantizing:
+            if self.rotate:
+                xr = hadamard(x, self._transform_plan(x.dtype),
+                              interpret=interpret)
+                return jnp.einsum("becf,efd->becd", xr, w)
+            return jnp.einsum("becf,efd->becd", x, w)
+        if not self.rotate:
+            from repro.core.quant import quantize
+
+            xq = quantize(x, self.mode, axis=-1 if self.per_token else None)
+            return jnp.einsum("becf,efd->becd", xq,
+                              quantize(w, self.mode, axis=-2))
+        return quant_dot_experts(x, w, self.plan(x.dtype),
+                                 interpret=interpret)

@@ -22,18 +22,16 @@ grouped transforms (exactness preserved; see DESIGN.md section 3).
 """
 from __future__ import annotations
 
-import functools
+import warnings
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import api as _api
-from repro.core.api import QuantEpilogue, hadamard, plan_for
+from repro.core.api import QuantDotSpec, RotationSpec, hadamard, plan_for
 from repro.core.hadamard import grouped_hadamard, largest_pow2_divisor
-from repro.core.quant import QuantConfig, quantize
-from repro.core.quant import quant_dot as _fake_quant_dot
+from repro.core.quant import QuantConfig
 from repro.kernels.ref import hadamard_matrix
 
 __all__ = [
@@ -67,121 +65,71 @@ def online_hadamard(x: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
     return hadamard(x, plan)
 
 
+# --------------------------------------------------------- DEPRECATED shims
+# The QuantConfig-threading consumer entry points predate the declarative
+# spec API (DESIGN.md section 7) and are kept only for backward
+# compatibility: each is a thin wrapper that builds the equivalent
+# RotationSpec / QuantDotSpec and applies it. New code declares the site
+# once and binds weights (pre-quantized QTensors on the serving path):
+#
+#     spec = QuantDotSpec.for_config(n, cfg, weight_axes=("dff", "fsdp"))
+#     y = spec.bind(w)(x)
+#
+_warned: set = set()  # one-shot per function per process
+
+
+def _warn_once(name: str, repl: str):
+    if name not in _warned:
+        _warned.add(name)
+        warnings.warn(
+            f"repro.core.rotations.{name} is deprecated; use {repl} "
+            "(see DESIGN.md section 7)",
+            DeprecationWarning, stacklevel=3,
+        )
+
+
 def online_hadamard_quantize(
     x: jnp.ndarray, cfg: QuantConfig, *, per_token: Optional[bool] = None
 ) -> jnp.ndarray:
-    """Online rotation + fake quantization of the last axis, fused.
+    """DEPRECATED: use :class:`repro.core.api.RotationSpec`.
 
-    The hot-path form of ``quantize(online_hadamard(x, cfg), ...)``: with
-    ``cfg.backend == 'pallas'`` (power-of-2 sizes, per-token scales) the
-    rotation, per-token absmax, and quantize-dequantize round trip run in
-    ONE VMEM-resident kernel -- the rotated tensor never round-trips
-    through HBM. Other configurations fall back to the two-step path with
-    identical forward numerics. Both paths are differentiable via the
-    straight-through estimator (quantize behaves as identity in the
-    pullback -- deliberately NOT the raw fake-quant gradient, whose
-    round() is zero almost everywhere; see repro.core.api).
-    """
+    Online rotation + fake quantization of the last axis, fused when the
+    plan supports it. Semantics unchanged: the shim builds the equivalent
+    RotationSpec and applies it."""
+    _warn_once("online_hadamard_quantize",
+               "repro.core.api.RotationSpec.for_config(n, cfg)(x)")
     pt = cfg.per_token if per_token is None else per_token
-    if not cfg.enabled:
-        return online_hadamard(x, cfg)
-    if not cfg.rotating:
-        return quantize(x, cfg.mode, axis=-1 if pt else None)
-    epi = QuantEpilogue(cfg.mode, per_token=pt, dequant=True)
-    plan = plan_for(
-        x.shape[-1], dtype=x.dtype, backend=_cfg_backend(cfg), epilogue=epi
-    )
-    return hadamard(x, plan)
+    spec = RotationSpec(
+        n=x.shape[-1], mode=cfg.mode if cfg.enabled else "none",
+        rotate=cfg.rotating, per_token=pt, dequant=True,
+        backend=_cfg_backend(cfg))
+    return spec(x)
 
 
-def _quant_dot_plan(n: int, dtype, cfg: QuantConfig):
-    return plan_for(
-        n, dtype=dtype, backend=_cfg_backend(cfg),
-        epilogue=QuantEpilogue(cfg.mode, per_token=cfg.per_token),
-    )
+def rotated_quant_dot(x: jnp.ndarray, w, cfg: QuantConfig) -> jnp.ndarray:
+    """DEPRECATED: use :class:`repro.core.api.QuantDotSpec`.
+
+    ``x @ w`` with the online Hadamard on x's contraction axis and REAL
+    low-precision operands -- the down-projection hot path. Semantics
+    unchanged: the shim builds the equivalent QuantDotSpec and binds
+    ``w`` (raw full-precision training form, or a pre-quantized QTensor
+    serving form)."""
+    _warn_once("rotated_quant_dot",
+               "repro.core.api.QuantDotSpec.for_config(n, cfg).bind(w)(x)")
+    return QuantDotSpec.for_config(x.shape[-1], cfg).bind(w)(x)
 
 
-def rotated_quant_dot(x: jnp.ndarray, w: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
-    """``x @ w`` with the online Hadamard on x's contraction axis and
-    REAL low-precision operands -- the down-projection hot path (per-token
-    scales on the activation, per-out-channel scales on the weight).
-
-    With a rotating+quantizing config this routes through
-    :func:`repro.core.api.quant_dot`: rotate, quantize, and the int8
-    (int32-accumulated) / fp8 contraction run as ONE fused kernel when the
-    plan supports it (pallas backend, power-of-2 n, per-token scales) --
-    the rotated quantized activations never round-trip through HBM, and
-    nothing fake-quantizes in f32 on the hot path. Both operands stay
-    differentiable via the straight-through estimator."""
-    if not cfg.enabled:
-        return online_hadamard(x, cfg) @ w
-    if not cfg.rotating:
-        # no rotation insertion point: the plain fake-quant matmul
-        return _fake_quant_dot(x, w, cfg)
-    plan = _quant_dot_plan(x.shape[-1], x.dtype, cfg)
-    return _api.quant_dot(x, w, plan)
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
-def _rqd_experts(x, w, plan, interpret):
-    # einsum form of quant_dot for stacked expert weights: the activation
-    # side is the fused rotate+quantize kernel ((q, scales) epilogue); the
-    # contraction runs on the real low-precision grids per expert. The
-    # scales factor out of the einsum exactly (s per token row, sw per
-    # (expert, out-channel)).
-    from repro.core.wquant import quantize_weight
-    from repro.kernels.registry import QSPECS
-
-    q, s = hadamard(x, plan, interpret=interpret)
-    wq, sw = quantize_weight(w, plan.epilogue.mode)     # (E,f,d), (E,1,d)
-    if QSPECS[plan.epilogue.mode][2]:
-        acc = jnp.einsum("becf,efd->becd", q.astype(jnp.int8),
-                         wq.astype(jnp.int8),
-                         preferred_element_type=jnp.int32
-                         ).astype(jnp.float32)
-    else:
-        acc = jnp.einsum("becf,efd->becd",
-                         q.astype(jnp.bfloat16), wq.astype(jnp.bfloat16),
-                         preferred_element_type=jnp.float32)
-    out = acc * s * sw[None]                            # (B,E,c,d)*(1,E,1,d)
-    return out.astype(x.dtype)
-
-
-def _rqd_experts_fwd(x, w, plan, interpret):
-    return _rqd_experts(x, w, plan, interpret), (x, w)
-
-
-def _rqd_experts_bwd(plan, interpret, res, g):
-    # STE through both quantizations: out ~= had(x) @ w per expert.
-    x, w = res
-    stripped = _api._strip(plan)
-    gf = g.astype(jnp.float32)
-    gy = jnp.einsum("becd,efd->becf", gf, w.astype(jnp.float32))
-    gx = hadamard(gy.astype(x.dtype), stripped, interpret=interpret)
-    y = hadamard(x, stripped, interpret=interpret)
-    gw = jnp.einsum("becf,becd->efd", y.astype(jnp.float32), gf)
-    return gx, gw.astype(w.dtype)
-
-
-_rqd_experts.defvjp(_rqd_experts_fwd, _rqd_experts_bwd)
-
-
-def rotated_quant_dot_experts(x: jnp.ndarray, w: jnp.ndarray,
+def rotated_quant_dot_experts(x: jnp.ndarray, w,
                               cfg: QuantConfig) -> jnp.ndarray:
-    """Per-expert ``rotated_quant_dot``: ``einsum('becf,efd->becd')`` with
-    the shared online Hadamard on the dispatched activations (ONE fused
-    rotate+quantize kernel -- all experts share d_ff) and real int8/fp8
-    expert weights with per-(expert, out-channel) scales. The MoE
-    down-projection hot path."""
-    if not cfg.enabled:
-        return jnp.einsum("becf,efd->becd", online_hadamard(x, cfg), w)
-    if not cfg.rotating:
-        xq = quantize(x, cfg.mode, axis=-1 if cfg.per_token else None)
-        return jnp.einsum("becf,efd->becd", xq,
-                          quantize(w, cfg.mode, axis=-2))
-    plan = _quant_dot_plan(x.shape[-1], x.dtype, cfg)
-    interpret = jax.default_backend() != "tpu"
-    return _rqd_experts(x, w, plan, interpret)
+    """DEPRECATED: use :meth:`repro.core.api.QuantDotSpec.bind_experts`.
+
+    Per-expert ``rotated_quant_dot``: ``einsum('becf,efd->becd')`` with
+    the shared online Hadamard on the dispatched activations and real
+    int8/fp8 expert weights. Semantics unchanged via the spec API."""
+    _warn_once(
+        "rotated_quant_dot_experts",
+        "repro.core.api.QuantDotSpec.for_config(n, cfg).bind_experts(w)(x)")
+    return QuantDotSpec.for_config(x.shape[-1], cfg).bind_experts(w)(x)
 
 
 def rotation_matrix(n: int, key: Optional[jax.Array] = None) -> jnp.ndarray:

@@ -1,41 +1,109 @@
-"""Weight-only INT8 storage (QuaRot's INT8 deployment, Perf iteration C4).
+"""Quantized weight storage: the ``QTensor`` pytree node.
 
-Matmul weights are stored as int8 with per-output-channel f32 scales and
-dequantized INSIDE the layer scan body -- so FSDP weight traffic (the
+Matmul weights are stored quantized (int8 / fp8) with f32 per-output-
+channel scales. Storage-only leaves (attention projections, embeddings)
+are dequantized INSIDE the layer scan body -- so FSDP weight traffic (the
 dominant decode collective for giant dense models, 47 GB/step/device for
-405B) moves int8 on the wire and in HBM, halving both vs bf16 storage.
+405B) moves 1 byte/element on the wire and in HBM. Rotation-consumer
+leaves (the down-projection weights the online Hadamard feeds) are kept
+quantized all the way into ``core.api.quant_dot``: the serving forward
+contracts against ``q`` directly and NEVER re-quantizes a weight.
+
+``QTensor`` replaces both prior ad-hoc forms -- the ``(wq, sw)`` tuples
+the quant_dot consumers threaded and the ``{"wq", "ws"}`` dicts the
+int8-storage path used. It is a registered pytree: ``q``/``scale`` are
+children (jit, scan-slicing, device_put, checkpointing all see through
+it), while ``mode`` and the logical sharding ``axes`` ride along as
+static metadata -- the declarative half of the rotation-site API
+(DESIGN.md section 7).
 
 The transform is post-training (pairs with the offline rotation fusion:
-rotate first, then quantize -- rotation is exactly what makes the int8
-grid safe for weights with outlier rows)."""
+rotate first, then quantize -- rotation is exactly what makes the low-
+precision grid safe for weights with outlier rows)."""
 from __future__ import annotations
 
-from typing import Any
+import dataclasses
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["quantize_weight", "quantize_lm_weights", "dequant_tree",
-           "is_qleaf", "qweight_specs"]
+__all__ = ["QTensor", "quantize_weight", "quantize_lm_weights",
+           "dequant_tree", "is_qleaf", "qweight_specs",
+           "QUANTIZE_WEIGHT_CALLS", "reset_quantize_weight_calls"]
 
-_INT8_MAX = 127.0
 _MIN_SIZE = 1 << 16   # don't quantize tiny leaves (norms, biases, LoRAs)
 
+# Number of times quantize_weight was invoked (trace-time). Serving-path
+# acceptance tests reset this, trace the forward, and assert it stayed 0:
+# pre-quantized QTensor weights mean zero per-forward weight quantization.
+QUANTIZE_WEIGHT_CALLS: int = 0
 
-def quantize_weight(w: jnp.ndarray, mode: str):
-    """Offline weight quantization for ``quant_dot`` consumers: ``(wq,
-    sw)`` with ``wq`` in the mode's real storage dtype (int8 / fp8) and
-    ``sw`` f32 per-OUT-channel scales (absmax over the contraction axis,
-    ``axis=-2``). Delegates to ``kernels.registry._quantize_rows`` -- the
-    same math the activation epilogues run -- so ``dequant(wq, sw)``
+
+def reset_quantize_weight_calls() -> None:
+    global QUANTIZE_WEIGHT_CALLS
+    QUANTIZE_WEIGHT_CALLS = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class QTensor:
+    """A quantized weight: storage-grid values + per-out-channel scales.
+
+    q:     (..., n, d) int8 / fp8 storage-dtype values
+    scale: (..., 1, d) f32 absmax scales over the contraction axis
+    mode:  'int8' | 'fp8_e4m3' | 'fp8_e5m2'   (static metadata)
+    axes:  logical sharding axes of the ORIGINAL weight (static metadata;
+           None when unknown). ``qweight_specs`` derives both children's
+           partition specs from this, so the sharding layer needs no side
+           table.
+
+    Registered as a pytree node: q/scale are children (scan slices the
+    layer axis of both together; checkpoints serialize both), mode/axes
+    are aux data. Iterable as ``(q, scale)`` for the legacy tuple unpack.
+    """
+
+    q: Any
+    scale: Any
+    mode: str = "int8"
+    axes: Optional[Tuple[Optional[str], ...]] = None
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    @property
+    def ndim(self) -> int:
+        return self.q.ndim
+
+    def dequant(self, dtype=jnp.float32) -> jnp.ndarray:
+        return (self.q.astype(jnp.float32) * self.scale).astype(dtype)
+
+    def __iter__(self):
+        return iter((self.q, self.scale))
+
+
+jax.tree_util.register_dataclass(
+    QTensor, data_fields=("q", "scale"), meta_fields=("mode", "axes"))
+
+
+def quantize_weight(w: jnp.ndarray, mode: str, *,
+                    axes: Optional[Tuple] = None) -> QTensor:
+    """Offline weight quantization for ``quant_dot`` consumers: a
+    :class:`QTensor` with ``q`` in the mode's real storage dtype (int8 /
+    fp8) and f32 per-OUT-channel scales (absmax over the contraction
+    axis, ``axis=-2``). Delegates to ``kernels.registry._quantize_rows``
+    -- the same math the activation epilogues run -- so ``qt.dequant()``
     reproduces ``core.quant.quantize(w, mode, axis=-2)`` bit-for-bit.
 
     w: (..., n, d) -- leading dims (e.g. stacked experts) keep their own
-    scales: sw is (..., 1, d)."""
+    scales: scale is (..., 1, d). ``axes`` attaches the weight's logical
+    sharding axes as QTensor metadata."""
     from repro.kernels.registry import QSPECS, _quantize_rows
 
+    global QUANTIZE_WEIGHT_CALLS
+    QUANTIZE_WEIGHT_CALLS += 1
     q, s = _quantize_rows(w.astype(jnp.float32), mode, axis=-2)
-    return q.astype(QSPECS[mode][1]), s
+    return QTensor(q=q.astype(QSPECS[mode][1]), scale=s, mode=mode, axes=axes)
 
 
 def _should_quantize(path, leaf) -> bool:
@@ -49,48 +117,78 @@ def _should_quantize(path, leaf) -> bool:
                    for k in keys)
 
 
-def _quantize_leaf(w: jnp.ndarray):
-    wf = w.astype(jnp.float32)
-    s = jnp.maximum(jnp.max(jnp.abs(wf), axis=-2, keepdims=True), 1e-8) / _INT8_MAX
-    q = jnp.clip(jnp.round(wf / s), -_INT8_MAX, _INT8_MAX).astype(jnp.int8)
-    return {"wq": q, "ws": s.astype(jnp.float32)}
-
-
 def is_qleaf(x: Any) -> bool:
-    return isinstance(x, dict) and set(x.keys()) == {"wq", "ws"}
+    return isinstance(x, QTensor)
 
 
-def quantize_lm_weights(params):
-    """Replace every large matmul weight with {'wq': int8, 'ws': f32}."""
-    def fix(path, leaf):
-        if hasattr(leaf, "ndim") and _should_quantize(path, leaf):
-            return _quantize_leaf(leaf)
+def _is_consumer(keys) -> bool:
+    """Is this leaf a quant_dot rotation consumer (down-projection input
+    fed by the online Hadamard)? Mirrors rotations.fuse_down_proj_rotations."""
+    if not keys:
+        return False
+    return keys[-1] == "w_down" or (keys[-1] == "wv" and "cmix" in keys)
+
+
+def quantize_lm_weights(params, cfg=None, specs=None):
+    """Replace every large matmul weight with a :class:`QTensor`, ONCE at
+    load -- the serving-path pre-quantization pass.
+
+    cfg (a ModelConfig, optional): when its ``quant`` says
+    rotating+quantizing, the rotation-consumer leaves (down-projection
+    weights) are stored in ``cfg.quant.mode`` so ``quant_dot`` contracts
+    against them natively; everything else stores int8. specs (optional,
+    the matching ``lm_param_specs`` tree) attaches each leaf's logical
+    sharding axes to the QTensor so ``qweight_specs`` can re-derive the
+    sharding tree from the params alone."""
+    qc = getattr(cfg, "quant", None)
+    consuming = qc is not None and qc.rotating and qc.enabled
+
+    def fix(path, leaf, spec=None):
+        if not hasattr(leaf, "ndim"):
+            return leaf
+        keys = [str(getattr(k, "key", getattr(k, "name", "")))
+                for k in path]
+        axes = tuple(spec) if isinstance(spec, tuple) else None
+        if consuming and _is_consumer(keys) and leaf.ndim >= 2 \
+                and leaf.dtype in (jnp.bfloat16, jnp.float16, jnp.float32):
+            # rotation-consumer site: stored in the serving quant mode
+            # regardless of size (quant_dot contracts against it natively)
+            return quantize_weight(leaf, qc.mode, axes=axes)
+        if _should_quantize(path, leaf):
+            return quantize_weight(leaf, "int8", axes=axes)
         return leaf
-    return jax.tree_util.tree_map_with_path(fix, params)
+
+    if specs is None:
+        return jax.tree_util.tree_map_with_path(fix, params)
+    return jax.tree_util.tree_map_with_path(fix, params, specs)
 
 
 def dequant_tree(tree, dtype):
-    """Dequantize all {'wq','ws'} leaves (elementwise, shard-local -- runs
+    """Dequantize all QTensor leaves (elementwise, shard-local -- runs
     inside the scan body AFTER the per-layer slice is fetched)."""
     def dq(x):
-        if is_qleaf(x):
-            return (x["wq"].astype(jnp.float32) * x["ws"]).astype(dtype)
-        return x
-    return jax.tree.map(dq, tree, is_leaf=lambda x: is_qleaf(x) or not isinstance(x, dict))
+        return x.dequant(dtype) if is_qleaf(x) else x
+    if is_qleaf(tree):
+        return tree.dequant(dtype)
+    return jax.tree.map(dq, tree, is_leaf=is_qleaf)
 
 
 def qweight_specs(spec_tree, shape_tree):
-    """Mirror lm_param_specs onto the quantized structure: wq keeps the
-    original leaf's logical axes; ws is (…,1,cols) -- same spec with the
-    contraction dim unsharded."""
+    """Mirror lm_param_specs onto the QTensor structure: ``q`` keeps the
+    original leaf's logical axes (the QTensor's own ``axes`` metadata
+    when attached); ``scale`` is (..., 1, cols) -- the same spec with the
+    contraction dim unsharded. The result is a spec tree with QTensor
+    nodes whose aux data matches the shape tree's, so generic resolvers
+    (``launch.steps._resolve_tree``) map straight over it."""
     is_spec = lambda x: isinstance(x, tuple) and all(
         isinstance(e, (str, type(None))) for e in x)
 
     def fix(spec, sds):
-        if isinstance(sds, dict) and set(sds.keys()) == {"wq", "ws"}:
-            ws_spec = tuple(spec[:-2]) + (None, spec[-1])
-            return {"wq": spec, "ws": ws_spec}
+        if is_qleaf(sds):
+            axes = sds.axes if sds.axes is not None else tuple(spec)
+            scale_spec = tuple(axes[:-2]) + (None, axes[-1])
+            return QTensor(q=tuple(axes), scale=scale_spec,
+                           mode=sds.mode, axes=sds.axes)
         return spec
 
-    return jax.tree.map(fix, spec_tree, shape_tree,
-                        is_leaf=lambda x: is_spec(x))
+    return jax.tree.map(fix, spec_tree, shape_tree, is_leaf=is_spec)

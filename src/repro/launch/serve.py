@@ -20,9 +20,13 @@ from repro.configs import get_config
 from repro.core.quant import QuantConfig
 from repro.launch import shapes as shp
 from repro.launch.mesh import make_local_mesh
-from repro.launch.steps import jit_prefill_step, jit_serve_step, param_shardings
+from repro.launch.steps import (
+    jit_prefill_step,
+    jit_serve_step,
+    make_param_init,
+    param_shardings,
+)
 from repro.launch.train import scaled_config
-from repro.models import init_lm
 from repro.models.lm import pad_kv_caches
 
 
@@ -37,6 +41,14 @@ def main(argv=None):
                     choices=["none", "int8", "fp8_e4m3", "fp8_e5m2"])
     ap.add_argument("--rotate", default="none", choices=["none", "hadamard"])
     ap.add_argument("--kernel", default="xla", choices=["xla", "pallas"])
+    ap.add_argument("--prequant", dest="prequant", action="store_true",
+                    default=None,
+                    help="pre-quantize weights ONCE at load into QTensors "
+                         "(storage int8; rotation-consumer weights in the "
+                         "serving quant mode, consumed by quant_dot with "
+                         "zero per-forward weight quantization). Default: "
+                         "on whenever --quant is not 'none'.")
+    ap.add_argument("--no-prequant", dest="prequant", action="store_false")
     ap.add_argument("--mp", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -44,13 +56,22 @@ def main(argv=None):
     quant = QuantConfig(mode=args.quant, rotate=args.rotate,
                         backend=args.kernel, kv_quant=args.quant != "none")
     cfg = scaled_config(get_config(args.arch), args.scale).with_quant(quant)
+    prequant = args.quant != "none" if args.prequant is None else args.prequant
+    if prequant:
+        cfg = dataclasses.replace(cfg, weight_quant="int8")
     mesh = make_local_mesh(args.mp)
     max_len = args.prompt_len + args.gen
 
     with mesh:
+        # param_shardings / make_param_init are QTensor-aware: with
+        # --prequant the weights come out of this one jit already
+        # quantized and never re-quantize per forward
         ps = param_shardings(cfg, mesh)
-        params = jax.jit(lambda k: init_lm(k, cfg), out_shardings=ps)(
+        params = jax.jit(make_param_init(cfg), out_shardings=ps)(
             jax.random.PRNGKey(args.seed))
+    if prequant:
+        print("weights pre-quantized once at load (QTensor tree; "
+              f"consumer mode={args.quant})")
 
     shape = shp.ShapeSpec("serve", "prefill", args.prompt_len, args.batch)
     prefill, (ps_, bs) = jit_prefill_step(cfg, shape, mesh)

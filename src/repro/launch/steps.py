@@ -37,18 +37,24 @@ def _resolve_tree(spec_tree, shape_tree, mesh: Mesh):
                             isinstance(e, (str, type(None))) for e in x))
 
 
-def _init_params_fn(cfg: ModelConfig):
+def make_param_init(cfg: ModelConfig):
+    """The parameter-init fn the launchers jit: init, then (for serving
+    configs with ``weight_quant='int8'``) pre-quantize the weight tree
+    into QTensors ONCE -- storage leaves in int8, rotation-consumer
+    leaves in ``cfg.quant.mode`` so the forward's quant_dot contracts
+    against them directly, with each leaf's logical sharding axes
+    attached for the QTensor-aware sharding trees."""
     def init(key):
         p = init_lm(key, cfg)
         if cfg.weight_quant == "int8":
             from repro.core.wquant import quantize_lm_weights
-            p = quantize_lm_weights(p)
+            p = quantize_lm_weights(p, cfg, lm_param_specs(cfg))
         return p
     return init
 
 
 def param_shapes(cfg: ModelConfig):
-    return jax.eval_shape(_init_params_fn(cfg), jax.random.PRNGKey(0))
+    return jax.eval_shape(make_param_init(cfg), jax.random.PRNGKey(0))
 
 
 def param_specs(cfg: ModelConfig):

@@ -17,8 +17,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.quant import kv_quantize, quantize
-from repro.core.rotations import online_hadamard, online_hadamard_quantize
+from repro.core.api import RotationSpec
 from repro.distributed.sharding import constrain
 from repro.models.common import apply_rope_angles, dense_init, mrope_angles, rope_freqs
 
@@ -77,6 +76,19 @@ def _project_qkv(cfg, p, x):
     return q, k, v
 
 
+def _qk_spec(cfg, hd: int) -> RotationSpec:
+    """The declarative per-head Q/K rotation site: rotate when the config
+    rotates, fake-quantize when the KV cache quantizes -- one spec object
+    (cached plans) instead of QuantConfig threading into free functions."""
+    return RotationSpec.for_config(hd, cfg.quant)
+
+
+def _v_spec(cfg, hd: int) -> RotationSpec:
+    """The V site: quantize-only (V's rotation is fused offline into
+    (W_v, W_o), so the online site never rotates)."""
+    return RotationSpec.for_config(hd, cfg.quant, rotate=False)
+
+
 def _rotate_quant_qk(cfg, q, k):
     """Paper deployment point: per-head Hadamard then low-precision Q/K.
 
@@ -87,18 +99,8 @@ def _rotate_quant_qk(cfg, q, k):
     only -- no f32 upcast of the head_dim tiles in VMEM), so the QK path
     never touches f32 activations before the f32-accumulated score
     einsum."""
-    qc = cfg.quant
-    if qc.rotating and qc.enabled and qc.kv_quant:
-        q = online_hadamard_quantize(q, qc, per_token=True)
-        k = online_hadamard_quantize(k, qc, per_token=True)
-        return q, k
-    if qc.rotating:
-        q = online_hadamard(q, qc)
-        k = online_hadamard(k, qc)
-    if qc.enabled and qc.kv_quant:
-        q = quantize(q, qc.mode, axis=-1)
-        k = quantize(k, qc.mode, axis=-1)
-    return q, k
+    spec = _qk_spec(cfg, q.shape[-1])
+    return spec(q), spec(k)
 
 
 def _sdpa(cfg, q, k, v, mask):
@@ -147,8 +149,7 @@ def apply_attention(
     q = apply_rope_angles(q, ang)
     k = apply_rope_angles(k, ang)
     q, k = _rotate_quant_qk(cfg, q, k)
-    if cfg.quant.enabled and cfg.quant.kv_quant:
-        v = quantize(v, cfg.quant.mode, axis=-1)
+    v = _v_spec(cfg, v.shape[-1])(v)
     kvdt = cfg.quant.kv_cache_dtype(x.dtype)
     k_cache, v_cache = k.astype(kvdt), v.astype(kvdt)
     if causal:
@@ -187,15 +188,9 @@ def cross_kv(cfg, p, enc_out: jnp.ndarray):
         k, v = k + p["bk"], v + p["bv"]
     k = k.reshape(B, T, KH, hd)
     v = v.reshape(B, T, KH, hd)
-    qc = cfg.quant
-    if qc.rotating and qc.enabled and qc.kv_quant:
-        k = online_hadamard_quantize(k, qc, per_token=True)   # fused
-        v = quantize(v, qc.mode, axis=-1)
-        return k, v
-    if qc.rotating:
-        k = online_hadamard(k, qc)
-    k, v = kv_quantize(k, v, qc)
-    return k, v
+    # same declarative sites as the decoder QK path: K rotates+quantizes
+    # (fused when the plan fuses), V quantizes only
+    return _qk_spec(cfg, hd)(k), _v_spec(cfg, hd)(v)
 
 
 def decode_attention(
@@ -218,8 +213,7 @@ def decode_attention(
     q = apply_rope_angles(q, ang)
     k = apply_rope_angles(k, ang)
     q, k = _rotate_quant_qk(cfg, q, k)
-    if cfg.quant.enabled and cfg.quant.kv_quant:
-        v = quantize(v, cfg.quant.mode, axis=-1)
+    v = _v_spec(cfg, v.shape[-1])(v)
     cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), cache_pos, axis=1)
     cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), cache_pos, axis=1)
     T = cache_k.shape[1]

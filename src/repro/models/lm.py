@@ -206,23 +206,38 @@ def _maybe_remat(cfg, fn):
 
 
 def _dequant_layer(cfg, lp, specs, dtype):
-    """Dequantize a layer slice. int8 weights are first constrained with
-    their fsdp dims dropped, forcing GSPMD to all-gather the INT8 tensor
-    and dequantize shard-locally -- weight wire traffic stays 1 byte/elem."""
-    from repro.core.wquant import is_qleaf
+    """Dequantize a layer slice. Quantized weights are first constrained
+    with their fsdp dims dropped, forcing GSPMD to all-gather the 1-byte
+    tensor and dequantize shard-locally -- weight wire traffic stays
+    1 byte/elem.
 
-    def one(spec_or_sub, p):
+    QTensor leaves at quant_dot CONSUMER sites (down-projection weights,
+    when the config's rotation-quantization matches their storage mode)
+    are kept quantized: the spec-bound quant_dot in the block consumes
+    q/scale directly, so the serving forward never re-quantizes (or even
+    dequantizes) those weights per step."""
+    from repro.core.wquant import _is_consumer, is_qleaf
+
+    qc = cfg.quant
+
+    def keep(keys, p) -> bool:
+        return (qc.rotating and qc.enabled and p.mode == qc.mode
+                and _is_consumer(keys))
+
+    def one(spec_or_sub, p, keys):
         if is_qleaf(p):
-            spec = spec_or_sub["wq"] if isinstance(spec_or_sub, dict) else spec_or_sub
+            if keep(keys, p):
+                return p
+            spec = spec_or_sub.q if is_qleaf(spec_or_sub) else spec_or_sub
             gather_spec = tuple(None if a == "fsdp" else a for a in spec[1:])
-            wq = constrain(p["wq"], *gather_spec)
-            return (wq.astype(jnp.float32) * p["ws"]).astype(dtype)
+            wq = constrain(p.q, *gather_spec)
+            return (wq.astype(jnp.float32) * p.scale).astype(dtype)
         if isinstance(p, dict):
             return {k: one(spec_or_sub[k] if isinstance(spec_or_sub, dict) else spec_or_sub,
-                           v) for k, v in p.items()}
+                           v, keys + (k,)) for k, v in p.items()}
         return p
 
-    return {k: one(specs[k], v) for k, v in lp.items()}
+    return {k: one(specs[k], v, (k,)) for k, v in lp.items()}
 
 
 def _run_stack(cfg, groups_cfg, gparams, x, positions, enc_out,

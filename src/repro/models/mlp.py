@@ -15,9 +15,15 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.core.rotations import rotated_quant_dot, rotated_quant_dot_experts
+from repro.core.api import QuantDotSpec
 from repro.distributed.sharding import constrain
 from repro.models.common import dense_init
+
+# Logical sharding axes of the down-projection weights -- the declarative
+# half of the consumer spec: under a mesh the out-channel ('fsdp') axis
+# folds into the quant_dot plan key and dispatch shards over it.
+_DOWN_AXES = ("dff", "fsdp")
+_EXPERT_DOWN_AXES = ("experts", "dff", "fsdp")
 
 
 def _act(cfg, g):
@@ -50,9 +56,12 @@ def apply_mlp(cfg, p, x):
     h = constrain(h, "batch", "seq", "dff")
     # ---- the paper's online rotation: Hadamard on the down_proj input,
     # fused with the activation quantization AND the int8/fp8 down-proj
-    # GEMM in one quant_dot kernel when the plan supports it
-    # (rotate="hadamard" + mode!="none" + backend="pallas") ----
-    y = rotated_quant_dot(h, p["w_down"], qc)
+    # GEMM in one quant_dot kernel when the plan supports it. The site is
+    # declared as a spec and bound to the weight: a raw weight quantizes
+    # on the fly (training), a pre-quantized QTensor is consumed directly
+    # (serving -- zero per-forward weight quantization) ----
+    spec = QuantDotSpec.for_config(h.shape[-1], qc, weight_axes=_DOWN_AXES)
+    y = spec.bind(p["w_down"])(h)
     return constrain(y, "batch", "seq", None)
 
 
@@ -119,8 +128,13 @@ def apply_moe(cfg, p, x):
     # shared online Hadamard (all experts share d_ff) + REAL int8/fp8
     # expert down-proj: one fused rotate+quantize kernel feeding a
     # low-precision einsum with int32/f32 accumulation -- no f32
-    # fake-quant on the hot path (see rotations.rotated_quant_dot_experts)
-    yout = rotated_quant_dot_experts(h, we["w_down"], qc)
+    # fake-quant on the hot path. Pre-quantized QTensor expert weights
+    # (per-(expert, out-channel) scales) are consumed directly. The
+    # expert einsum shards under GSPMD (not the 2-D shard_map dispatch);
+    # weight_axes here is declarative metadata for the site.
+    spec = QuantDotSpec.for_config(h.shape[-1], qc,
+                                   weight_axes=_EXPERT_DOWN_AXES)
+    yout = spec.bind_experts(we["w_down"])(h)
     y = jnp.einsum("bsec,becd->bsd", combine.astype(x.dtype), yout)
     y = constrain(y, "batch", "seq", None)
 

@@ -20,7 +20,7 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.rotations import rotated_quant_dot
+from repro.core.api import QuantDotSpec
 from repro.distributed.sharding import constrain
 from repro.models.common import dense_init
 
@@ -239,8 +239,11 @@ def apply_rwkv_cmix(cfg, p, x, x_prev=None, *, return_state: bool = False):
     # the paper's online rotation point (down-projection input): rotate +
     # per-token quantize + the real int8/fp8 contraction run as one fused
     # quant_dot kernel when the plan supports it (no f32 fake-quant, no
-    # HBM round trip of the rotated tensor)
-    y = r * rotated_quant_dot(k, p["wv"], cfg.quant)
+    # HBM round trip of the rotated tensor). Declared as a spec: a
+    # pre-quantized QTensor 'wv' is consumed directly on the serving path.
+    spec = QuantDotSpec.for_config(k.shape[-1], cfg.quant,
+                                   weight_axes=("dff", "fsdp"))
+    y = r * spec.bind(p["wv"])(k)
     y = constrain(y, "batch", "seq", None)
     if return_state:
         return y, x[:, -1, :]

@@ -1,0 +1,288 @@
+"""The declarative rotation-site API (DESIGN.md section 7): QuantDotSpec /
+RotationSpec binding, QTensor serving equivalence, the zero-per-forward-
+weight-quantization acceptance, checkpoint round-trips, and the
+deprecation shims over the old QuantConfig-threading free functions."""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import rotations, wquant
+from repro.core.api import (
+    QuantDotSpec,
+    QuantEpilogue,
+    RotationSpec,
+    hadamard,
+    plan_for,
+    quant_dot,
+)
+from repro.core.quant import QuantConfig, quantize
+from repro.core.wquant import QTensor, quantize_lm_weights, quantize_weight
+from repro.launch.shapes import ShapeSpec, make_batch
+from repro.models import init_lm, lm_param_specs
+from repro.models.lm import lm_forward, lm_prefill
+
+MODES = ("int8", "fp8_e4m3", "fp8_e5m2")
+
+
+def _x(shape, seed=0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+# ------------------------------------------------------------ spec: dense
+@pytest.mark.parametrize("mode", MODES)
+def test_bind_qtensor_matches_raw_bitwise(mode):
+    """Serving form (pre-quantized QTensor) == training form (on-the-fly
+    weight quantization) bit for bit: same epilogue math, same grids."""
+    x = _x((7, 512), seed=1)
+    w = _x((512, 96), seed=2) * 0.05
+    cfg = QuantConfig(mode=mode, rotate="hadamard", backend="pallas")
+    spec = QuantDotSpec.for_config(512, cfg)
+    a = spec.bind(w)(x)
+    b = spec.bind(quantize_weight(w, mode))(x)
+    assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_spec_matches_plain_quant_dot():
+    x = _x((5, 256), seed=3)
+    w = _x((256, 64), seed=4) * 0.1
+    cfg = QuantConfig(mode="int8", rotate="hadamard", backend="pallas")
+    a = QuantDotSpec.for_config(256, cfg).bind(w)(x)
+    b = quant_dot(x, w, mode="int8", backend="pallas")
+    assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_spec_disabled_and_unrotated_paths():
+    x = _x((5, 256), seed=5)
+    w = _x((256, 64), seed=6) * 0.1
+    # mode 'none': plain (rotated) matmul
+    off = QuantDotSpec.for_config(256, QuantConfig())
+    np.testing.assert_allclose(np.asarray(off.bind(w)(x)),
+                               np.asarray(x @ w), rtol=1e-6)
+    rot = QuantDotSpec.for_config(
+        256, QuantConfig(rotate="hadamard", backend="xla"))
+    np.testing.assert_allclose(np.asarray(rot.bind(w)(x)),
+                               np.asarray(hadamard(x, backend="xla") @ w),
+                               rtol=1e-6)
+    # quantize without rotation: the fake-quant matmul
+    fq = QuantDotSpec.for_config(256, QuantConfig(mode="int8"))
+    from repro.core.quant import quant_dot as fake_quant_dot
+    np.testing.assert_allclose(
+        np.asarray(fq.bind(w)(x)),
+        np.asarray(fake_quant_dot(x, w, QuantConfig(mode="int8"))),
+        rtol=1e-6)
+
+
+def test_bind_qtensor_mode_mismatch_dequantizes_not_requantizes():
+    """A storage-only QTensor at a site with a different mode falls back
+    to the dequantized raw path -- never a silent re-quantization."""
+    x = _x((4, 256), seed=7)
+    qt = quantize_weight(_x((256, 32), seed=8) * 0.1, "int8")
+    spec = QuantDotSpec.for_config(
+        256, QuantConfig(mode="fp8_e4m3", rotate="hadamard", backend="xla"))
+    out = spec.bind(qt)(x)
+    want = spec.bind(qt.dequant(jnp.float32))(x)
+    assert (np.asarray(out) == np.asarray(want)).all()
+
+
+def test_spec_ste_gradients_flow():
+    x = _x((6, 256), seed=9)
+    w = _x((256, 64), seed=10) * 0.1
+    cfg = QuantConfig(mode="int8", rotate="hadamard", backend="pallas")
+    spec = QuantDotSpec.for_config(256, cfg)
+    gx, gw = jax.grad(lambda a, b: jnp.sum(spec.bind(b)(a) ** 2),
+                      argnums=(0, 1))(x, w)
+    assert bool(jnp.isfinite(gx).all()) and float(jnp.abs(gx).max()) > 0
+    assert bool(jnp.isfinite(gw).all()) and float(jnp.abs(gw).max()) > 0
+    # serving form: x-only gradients, quantized weight is a statistic
+    qt = quantize_weight(w, "int8")
+    gx2 = jax.grad(lambda a: jnp.sum(spec.bind(qt)(a) ** 2))(x)
+    assert bool(jnp.isfinite(gx2).all()) and float(jnp.abs(gx2).max()) > 0
+
+
+# ---------------------------------------------------------- spec: experts
+def test_bind_experts_qtensor_matches_raw():
+    x = _x((2, 3, 4, 256), seed=11)
+    w = _x((3, 256, 64), seed=12) * 0.1
+    cfg = QuantConfig(mode="int8", rotate="hadamard", backend="pallas")
+    spec = QuantDotSpec.for_config(256, cfg)
+    a = spec.bind_experts(w)(x)
+    b = spec.bind_experts(quantize_weight(w, "int8"))(x)
+    assert (np.asarray(a) == np.asarray(b)).all()
+    # per-expert agreement with the dense spec
+    for e in range(3):
+        want = spec.bind(w[e])(x[:, e])
+        np.testing.assert_allclose(np.asarray(a[:, e]), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+    # x-gradient flows through the serving form
+    g = jax.grad(lambda a_: jnp.sum(
+        spec.bind_experts(quantize_weight(w, "int8"))(a_) ** 2))(x)
+    assert bool(jnp.isfinite(g).all()) and float(jnp.abs(g).max()) > 0
+
+
+# -------------------------------------------------------- RotationSpec
+def test_rotation_spec_covers_all_site_shapes():
+    x = _x((4, 8, 128), seed=13)
+    # rotate + fake-quant (the fused KV site)
+    cfgq = QuantConfig(mode="fp8_e4m3", rotate="hadamard", backend="pallas",
+                       kv_quant=True)
+    spec = RotationSpec.for_config(128, cfgq)
+    want = quantize(hadamard(x, backend="pallas"), "fp8_e4m3", axis=-1)
+    np.testing.assert_allclose(np.asarray(spec(x)), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+    # rotate only
+    s2 = RotationSpec.for_config(128, QuantConfig(rotate="hadamard",
+                                                  backend="xla"))
+    np.testing.assert_allclose(np.asarray(s2(x)),
+                               np.asarray(hadamard(x, backend="xla")),
+                               rtol=1e-6)
+    # quantize only (the V site: rotate=False)
+    s3 = RotationSpec.for_config(128, cfgq, rotate=False)
+    np.testing.assert_allclose(np.asarray(s3(x)),
+                               np.asarray(quantize(x, "fp8_e4m3", axis=-1)),
+                               rtol=1e-6)
+    # identity
+    s4 = RotationSpec.for_config(128, QuantConfig())
+    assert s4(x) is x
+    with pytest.raises(ValueError, match="last"):
+        spec(_x((4, 64)))
+
+
+# ------------------------------------- acceptance: zero per-forward quant
+def _serving_cfg(mode="fp8_e4m3"):
+    quant = QuantConfig(mode=mode, rotate="hadamard", backend="xla",
+                        kv_quant=True)
+    return dataclasses.replace(
+        get_config("llama3_8b").scaled_down().with_quant(quant),
+        weight_quant="int8")
+
+
+def test_serving_forward_zero_weight_quantization():
+    """THE acceptance criterion: with a pre-quantized QTensor param tree
+    the serving forward (prefill and decode) contains no per-forward
+    weight quantization -- asserted via the quantize_weight trace
+    counter, which the raw-weight path demonstrably trips."""
+    cfg = _serving_cfg()
+    cfg_raw = dataclasses.replace(cfg, weight_quant="none")
+    params = init_lm(jax.random.PRNGKey(0), cfg_raw)
+    qparams = quantize_lm_weights(params, cfg, lm_param_specs(cfg))
+    batch = make_batch(cfg, ShapeSpec("t", "train", 32, 2))
+
+    wquant.reset_quantize_weight_calls()
+    jax.make_jaxpr(lambda p, b: lm_prefill(cfg, p, b)[0])(qparams, batch)
+    assert wquant.QUANTIZE_WEIGHT_CALLS == 0
+
+    # the counter is live: the raw-weight quantized forward trips it
+    wquant.reset_quantize_weight_calls()
+    jax.make_jaxpr(lambda p, b: lm_forward(cfg_raw, p, b)[0])(params, batch)
+    assert wquant.QUANTIZE_WEIGHT_CALLS > 0
+
+
+def test_serving_forward_numerics_close_to_raw():
+    cfg = _serving_cfg()
+    cfg_raw = dataclasses.replace(cfg, weight_quant="none")
+    params = init_lm(jax.random.PRNGKey(0), cfg_raw)
+    qparams = quantize_lm_weights(params, cfg, lm_param_specs(cfg))
+    batch = make_batch(cfg, ShapeSpec("t", "train", 32, 2))
+    lq, _, _ = lm_forward(cfg, qparams, batch)
+    lr, _, _ = lm_forward(cfg_raw, params, batch)
+    a = np.asarray(lq[..., :cfg.vocab_size], np.float32)
+    b = np.asarray(lr[..., :cfg.vocab_size], np.float32)
+    assert np.isfinite(a).all()
+    # weight storage quantization is the only delta; logits stay close
+    assert np.abs(a - b).max() / max(np.abs(b).max(), 1e-6) < 0.15
+
+
+# ------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrips_qtensor_tree(tmp_path):
+    from repro.checkpoint import restore_checkpoint, save_checkpoint
+
+    tree = {"mlp": {"w_down": quantize_weight(
+        _x((128, 64), seed=14) * 0.1, "fp8_e4m3", axes=("dff", "fsdp"))},
+        "norm": jnp.ones((8,))}
+    save_checkpoint(str(tmp_path), 3, tree, async_write=False)
+    back = restore_checkpoint(str(tmp_path), 3,
+                              jax.eval_shape(lambda: tree))
+    qt, bt = tree["mlp"]["w_down"], back["mlp"]["w_down"]
+    assert isinstance(bt, QTensor) and bt.mode == "fp8_e4m3"
+    assert bt.axes == ("dff", "fsdp")
+    assert (np.asarray(qt.q, np.float32) == np.asarray(bt.q, np.float32)).all()
+    assert (np.asarray(qt.scale) == np.asarray(bt.scale)).all()
+
+
+def test_checkpoint_leaf_mismatch_is_loud(tmp_path):
+    from repro.checkpoint import restore_checkpoint, save_checkpoint
+
+    save_checkpoint(str(tmp_path), 1, {"w": jnp.ones((64, 32))},
+                    async_write=False)
+    template = jax.eval_shape(
+        lambda: {"w": quantize_weight(jnp.ones((64, 32)), "int8")})
+    with pytest.raises(ValueError, match="leaves"):
+        restore_checkpoint(str(tmp_path), 1, template)
+
+
+# ------------------------------------------------------------------ shims
+def test_rotation_shims_warn_once_and_delegate():
+    x = _x((4, 256), seed=15)
+    w = _x((256, 64), seed=16) * 0.1
+    xe = _x((2, 2, 3, 256), seed=18)          # (B, E, cap, f)
+    we = _x((2, 256, 64), seed=17) * 0.1      # (E, f, d)
+    cfg = QuantConfig(mode="int8", rotate="hadamard", backend="pallas")
+    calls = {
+        "rotated_quant_dot":
+            lambda: rotations.rotated_quant_dot(x, w, cfg),
+        "rotated_quant_dot_experts":
+            lambda: rotations.rotated_quant_dot_experts(xe, we, cfg),
+        "online_hadamard_quantize":
+            lambda: rotations.online_hadamard_quantize(x, cfg),
+    }
+    for name, call in calls.items():
+        rotations._warned.discard(name)
+        with pytest.warns(DeprecationWarning, match=name):
+            call()
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")  # second call must stay silent
+            call()
+    # ... and the shim output is the spec API's output
+    rotations._warned.add("rotated_quant_dot")
+    a = rotations.rotated_quant_dot(x, w, cfg)
+    b = QuantDotSpec.for_config(256, cfg).bind(w)(x)
+    assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_bind_accepts_legacy_weight_tuple():
+    """The legacy pre-quantized ``(wq, sw)`` tuple (DESIGN.md migration
+    table) binds like a QTensor -- both through the spec and through the
+    deprecated rotated_quant_dot shim -- with storage-dtype validation."""
+    x = _x((4, 256), seed=19)
+    w = _x((256, 64), seed=20) * 0.1
+    cfg = QuantConfig(mode="int8", rotate="hadamard", backend="pallas")
+    spec = QuantDotSpec.for_config(256, cfg)
+    qt = quantize_weight(w, "int8")
+    want = spec.bind(qt)(x)
+    assert (np.asarray(spec.bind((qt.q, qt.scale))(x))
+            == np.asarray(want)).all()
+    rotations._warned.add("rotated_quant_dot")
+    assert (np.asarray(rotations.rotated_quant_dot(x, (qt.q, qt.scale), cfg))
+            == np.asarray(want)).all()
+    with pytest.raises(ValueError, match="storage dtype"):
+        bad = quantize_weight(w, "fp8_e4m3")
+        spec.bind((bad.q, bad.scale))
+
+
+# -------------------------------------------------------- mesh plan keys
+def test_meshless_spec_plan_has_no_mesh_axes():
+    """Without an active mesh the spec's plan key carries mesh_axes=None
+    and is the SAME cached object as a plain plan_for plan (no retrace on
+    migration). The >1-device mesh-key case lives in test_distributed."""
+    cfg = QuantConfig(mode="int8", rotate="hadamard", backend="xla")
+    spec = QuantDotSpec.for_config(256, cfg, weight_axes=("dff", "fsdp"))
+    p = spec.plan(jnp.float32, d=64)
+    assert p.mesh_axes is None
+    assert p is plan_for(256, backend="xla",
+                         epilogue=QuantEpilogue("int8"))
