@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.core.api import QuantEpilogue, hadamard, plan_for, quant_dot
 from repro.core.wquant import quantize_weight
-from repro.kernels.quant_dot import epilogue_dot
+from repro.kernels.quant_dot import epilogue_dot, pallas_quant_dot
 from repro.kernels.registry import QSPECS
 
 
@@ -43,7 +43,87 @@ def _hbm_bytes(rows: int, n: int, d: int, dtype_bytes: int, q_bytes: int):
     return unfused, fused
 
 
+def _time_min(fn, *args, iters: int = 7) -> float:
+    """min-of-iters wall clock (ms): the robust estimator for the noisy
+    CPU/interpret timings the d-sweep compares."""
+    jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3
+
+
+def _run_d_sweep(csv: List[str], smoke: bool, records: Optional[List]):
+    """Transform-amortization curve (PR 5): sweep the out-channel width d
+    at fixed n / rows / block_n and compare the rotate-once schedule
+    against the PR-3 revisit schedule. With block_n pinned, the grid
+    revisits each row block d/block_n times; the revisit schedule
+    recomputes the rotate+quantize every visit -- a transform term LINEAR
+    in d/block_n on top of the GEMM -- while the rotate-once schedule
+    transforms once per row block and serves every visit from VMEM
+    scratch, so its transform work is FLAT in d (the
+    ``transforms_per_row_block`` columns; the structural guarantee is
+    asserted in tests/test_quant_dot.py). Outputs are bitwise identical
+    (asserted here).
+
+    Wall-clock caveat: on the TPU-relevant path the scratch lives in VMEM
+    and the win is the eliminated transform flops. CPU *interpret* mode,
+    however, functionalizes scratch state -- the q/s buffers are threaded
+    (copied) through every grid step and the j==0 cond -- adding a
+    per-step overhead of the same order as the transform it saves, so the
+    interpret ms of the two schedules track each other within noise. The
+    ms records are still the trajectory gate (regressions in either
+    schedule fail benchmarks/compare.py); the amortization claim rides on
+    the transform-work columns."""
+    rng = np.random.default_rng(1)
+    n, rows, bn, mode = 1024, 64, 256, "int8"
+    ds = (256, 512) if smoke else (256, 512, 1024, 2048)
+    x = jnp.asarray(rng.standard_normal((rows, n)), jnp.float32)
+    plan = plan_for(n, backend="pallas", epilogue=QuantEpilogue(mode))
+    for d in ds:
+        w = jnp.asarray(rng.standard_normal((n, d)) * 0.05, jnp.float32)
+        wq, sw = quantize_weight(w, mode)
+        once = jax.jit(lambda a, q, s: pallas_quant_dot(
+            a, q, s, plan, True, "rotate_once", bn))
+        revisit = jax.jit(lambda a, q, s: pallas_quant_dot(
+            a, q, s, plan, True, "revisit", bn))
+        t_once = _time_min(once, x, wq, sw)
+        t_revisit = _time_min(revisit, x, wq, sw)
+        assert (np.asarray(once(x, wq, sw))
+                == np.asarray(revisit(x, wq, sw))).all()
+        tiles = -(-d // bn)
+        csv.append(
+            f"quant_dot_dsweep,n={n},d={d},mode={mode},block_n={bn},"
+            f"tiles_per_row_block={tiles},"
+            f"transforms_per_row_block_rotate_once=1,"
+            f"transforms_per_row_block_revisit={tiles},"
+            f"rotate_once_ms={t_once:.2f},revisit_ms={t_revisit:.2f},"
+            f"speedup={t_revisit / t_once:.2f}x")
+        if records is not None:
+            shape = f"{rows}x{n}x{d}"
+            # bytes of the shape actually timed (same convention as the
+            # fused-vs-unfused records below): activation in + int8
+            # weight + f32 out-channel scales + f32 output
+            byt = rows * n * 4 + n * d * 1 + d * 4 + rows * d * 4
+            for backend, ms, tr in (("pallas_rotate_once", t_once, 1),
+                                    ("pallas_revisit", t_revisit, tiles)):
+                records.append({
+                    "bench": f"quant_dot_dsweep_{mode}", "shape": shape,
+                    "dtype": "float32", "backend": backend,
+                    "ms": round(ms, 4),
+                    "gbps": round(byt / (ms * 1e-3) / 1e9, 3),
+                    # extra trajectory field (compare.py matches on the
+                    # 4-key identity and ignores it): the per-row-block
+                    # transform count -- flat at 1 for rotate-once,
+                    # linear in d/block_n for the PR-3 schedule
+                    "transforms_per_row_block": tr,
+                })
+
+
 def run(csv: List[str], smoke: bool = False, records: Optional[List] = None):
+    _run_d_sweep(csv, smoke, records)
     rng = np.random.default_rng(0)
     sizes = ((2048, 512),) if smoke else ((2048, 512), (4096, 1024))
     rows = 64 if smoke else 256

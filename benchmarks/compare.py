@@ -1,0 +1,123 @@
+"""Diff two ``BENCH_*.json`` perf-record files and gate on regressions.
+
+The perf-trajectory files committed per PR (``benchmarks/run.py --json``)
+hold records ``{bench, shape, dtype, backend, ms, gbps}``. This tool
+matches records between a baseline and a candidate file on the identity
+key ``(bench, shape, dtype, backend)``, prints a per-record delta table,
+and exits nonzero when any matched record's ``ms`` regressed by more
+than ``--max-regress`` percent -- so a perf regression in a committed
+baseline (or in CI's bench-smoke run against it) fails loudly instead of
+drifting silently.
+
+Records present in only one file are listed informationally (bench
+suites grow across PRs; new records are not regressions). Pass
+``--require-overlap`` to also fail when NO record matches -- this keeps
+a CI gate honest: if a shape/bench rename silently empties the
+comparison, the gate errors instead of vacuously passing.
+
+Usage:
+  python benchmarks/compare.py BASELINE.json NEW.json \
+      [--max-regress PCT] [--require-overlap]
+
+Exit codes: 0 ok, 1 regression above threshold, 2 no overlapping
+records with --require-overlap.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Tuple
+
+Key = Tuple[str, str, str, str]
+
+
+def _load(path: str) -> Dict[Key, dict]:
+    with open(path) as f:
+        records = json.load(f)
+    out: Dict[Key, dict] = {}
+    for r in records:
+        key = (r["bench"], r["shape"], r["dtype"], r["backend"])
+        # duplicate keys (repeated suites in one run): keep the fastest,
+        # matching how perf is read everywhere else (min over repeats)
+        if key not in out or r["ms"] < out[key]["ms"]:
+            out[key] = r
+    return out
+
+
+def compare(base: Dict[Key, dict], new: Dict[Key, dict],
+            max_regress: float,
+            min_ms: float = 0.0) -> Tuple[List[str], List[str], int]:
+    """Returns (report lines, regression lines, overlap count).
+
+    Pairs where either side is below ``min_ms`` are reported but never
+    flagged: sub-millisecond interpret/XLA records jitter by multiples
+    run-to-run, so a percent bound on them is pure noise (CI floors them
+    at 1 ms)."""
+    lines: List[str] = []
+    regressions: List[str] = []
+    common = sorted(set(base) & set(new))
+    for key in common:
+        b, n = base[key]["ms"], new[key]["ms"]
+        delta = (n - b) / b * 100 if b > 0 else 0.0
+        if min(b, n) < min_ms:
+            lines.append(f"{'/'.join(key)}: {b:.4f} -> {n:.4f} ms "
+                         f"({delta:+.1f}%)  [below {min_ms:g} ms floor, "
+                         "not gated]")
+            continue
+        tag = ""
+        if delta > max_regress:
+            tag = f"  <-- REGRESSION (> {max_regress:.0f}%)"
+            regressions.append(f"{'/'.join(key)}: {b:.4f} -> {n:.4f} ms "
+                               f"(+{delta:.1f}%)")
+        lines.append(f"{'/'.join(key)}: {b:.4f} -> {n:.4f} ms "
+                     f"({delta:+.1f}%){tag}")
+    for key in sorted(set(base) - set(new)):
+        lines.append(f"{'/'.join(key)}: only in baseline")
+    for key in sorted(set(new) - set(base)):
+        lines.append(f"{'/'.join(key)}: only in candidate (new record)")
+    return lines, regressions, len(common)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="diff two BENCH_*.json files; exit nonzero on "
+                    "ms regressions above the threshold")
+    ap.add_argument("baseline", help="baseline BENCH_*.json")
+    ap.add_argument("candidate", help="candidate BENCH_*.json")
+    ap.add_argument("--max-regress", type=float, default=25.0,
+                    metavar="PCT",
+                    help="max tolerated ms increase per record, percent "
+                         "(default 25; CI uses a loose bound because "
+                         "wall-clock compares across machines)")
+    ap.add_argument("--min-ms", type=float, default=0.0, metavar="MS",
+                    help="ignore (report but never flag) record pairs "
+                         "where either side is faster than this -- "
+                         "sub-ms interpret records jitter by multiples "
+                         "(default 0 = gate everything)")
+    ap.add_argument("--require-overlap", action="store_true",
+                    help="also fail (exit 2) when no record key matches "
+                         "between the files")
+    args = ap.parse_args()
+
+    base, new = _load(args.baseline), _load(args.candidate)
+    lines, regressions, overlap = compare(base, new, args.max_regress,
+                                          args.min_ms)
+    for line in lines:
+        print(line)
+    print(f"# {overlap} matched record(s), {len(regressions)} "
+          f"regression(s) above {args.max_regress:.0f}%")
+    if args.require_overlap and overlap == 0:
+        print("# ERROR: no overlapping records -- the comparison is "
+              "vacuous", file=sys.stderr)
+        return 2
+    if regressions:
+        print("# ms regressions:", file=sys.stderr)
+        for r in regressions:
+            print(f"#   {r}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,7 +12,9 @@ Prints ``name,key=value,...`` CSV lines; ``--only <name>`` runs a subset.
 ``--json PATH`` additionally writes machine-readable records
 ``{bench, shape, dtype, backend, ms, gbps}`` -- the perf-trajectory
 format (``BENCH_<tag>.json`` files are committed per PR so regressions
-are diffable across the stack's history).
+are diffable across the stack's history; ``benchmarks/compare.py``
+diffs two of them record-by-record and exits nonzero on ms regressions
+-- the CI bench-smoke job runs it against the committed baseline).
 """
 from __future__ import annotations
 

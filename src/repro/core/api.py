@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Any, Optional, Tuple, Union
 
 import jax
@@ -441,23 +442,92 @@ def _resolve_mesh_axes(weight_axes, d: Optional[int]):
     return axes
 
 
-def _sharded_quant_dot(x, wq, sw, plan: HadamardPlan, interpret: bool):
-    """quant_dot over a mesh via ``shard_map``: every shard rotates the
-    full row block (the contraction axis is never split -- the Hadamard
-    spans it) and contracts against ITS slice of the weight with ITS
-    slice of the per-out-channel scales, so per-shard weight scales are
-    used end to end and the concatenated result is bitwise the
-    single-device int8 output. The xla backend is the shard-local oracle
-    (every op a reshape/dot -- the pjit-shardable path). Returns None
-    when the plan's mesh is not the current one (caller falls back).
+# Once-per-process-per-reason warning guard for sharded-dispatch
+# fallbacks; the companion TRACE_COUNTS[("sharded_quant_dot", <reason>)]
+# counters keep counting every traced fallback (tests reset neither).
+_SHARDED_FALLBACK_WARNED = set()
 
-    Tradeoffs (deliberate for this first sharded cut; ROADMAP follow-on):
-    rows are replicated across the sharded axis (in_spec P(None, None)),
-    so each shard redoes the rotate+quantize of the full row block --
-    correct by construction, but row work is not data-parallel inside
-    this op; and the shard-local compute is the unfused oracle rather
-    than the fused pallas kernel. Row-sharding over the data axes plus a
-    shard-local fused kernel is the next step on this seam."""
+# Trace-time record of the last sharded dispatch decision (row axes the
+# activation was sharded over, whether the shard-local compute was the
+# fused kernel, which backend ran it). Observability hook for tests --
+# NOT an API.
+_LAST_SHARDED_DISPATCH: dict = {}
+
+
+def _sharded_fallback(reason: str, msg: str) -> None:
+    """Record (and warn once per process per reason) that a mesh plan
+    fell back from the sharded/fused hot path. Sharded perf regressions
+    -- a plan silently going replicated, or shard-local compute silently
+    going unfused -- used to be invisible; now they show up in
+    ``TRACE_COUNTS[("sharded_quant_dot", reason)]`` and as a one-shot
+    ``RuntimeWarning``."""
+    registry.TRACE_COUNTS[("sharded_quant_dot", reason)] += 1
+    if reason not in _SHARDED_FALLBACK_WARNED:
+        _SHARDED_FALLBACK_WARNED.add(reason)
+        warnings.warn(
+            f"sharded quant_dot fallback [{reason}]: {msg} (warned once "
+            "per process; TRACE_COUNTS[('sharded_quant_dot', "
+            f"{reason!r})] keeps counting)",
+            RuntimeWarning, stacklevel=3)
+
+
+def _strip_mesh(plan: HadamardPlan) -> HadamardPlan:
+    """The single-device twin of a mesh plan (same backend/epilogue/
+    tiling, mesh_axes=None) -- the plan the shard-local kernel runs."""
+    if plan.mesh_axes is None:
+        return plan
+    return _build_plan(
+        plan.n, plan.p, plan.dtype, plan.compute_dtype, plan.scale,
+        plan.backend, plan.epilogue, plan.block_m)
+
+
+def _row_shard_axes(mesh, plan: HadamardPlan, m: int) -> Tuple[str, ...]:
+    """Mesh axes to row-shard the activation over inside the sharded
+    quant_dot: the logical 'batch' (data) axes of the active rules table,
+    minus axes already spent on the weight's out-channel shards, minus
+    axes whose cumulative size does not divide the row count (same guard
+    as ``distributed.sharding._build_parts``). Size-1 axes are kept --
+    the spec stays structurally row-sharded and costs nothing."""
+    from repro.distributed.sharding import _resolve_axis
+
+    ax = _resolve_axis(mesh, "batch")
+    if ax is None:
+        return ()
+    axes = (ax,) if isinstance(ax, str) else tuple(ax)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    keep, total = [], 1
+    for a in axes:
+        if a in plan.mesh_axes:
+            continue
+        if m % (total * sizes[a]) == 0:
+            keep.append(a)
+            total *= sizes[a]
+    return tuple(keep)
+
+
+def _sharded_quant_dot(x, wq, sw, plan: HadamardPlan, interpret: bool):
+    """quant_dot over a mesh via ``shard_map``, fused and data-parallel:
+
+      * the activation is ROW-SHARDED over the mesh data axes (the rules
+        table's 'batch' axes, minus any axis the weight already uses,
+        divisibility-guarded) -- each shard rotates and quantizes only
+        its own rows, so transform work is data-parallel instead of
+        replicated per shard;
+      * the contraction axis is never split (the Hadamard spans it): each
+        shard contracts against ITS slice of the weight columns with ITS
+        slice of the per-out-channel scales, so per-shard weight scales
+        are used end to end and the assembled result is bitwise the
+        single-device int8 output;
+      * the shard-local compute is the FUSED rotate-once Pallas kernel
+        whenever the (mesh-stripped) plan fuses; otherwise the unfused
+        oracle semantics run shard-locally (grouped sizes, per-tensor
+        scales, xla backend -- counted + warned via
+        ``_sharded_fallback("unfused_local")`` so the regression is
+        observable).
+
+    Returns None when the plan's mesh axes are not provided by the
+    current mesh (caller falls back to the replicated single-device path
+    and records ``mesh_mismatch``)."""
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
@@ -468,26 +538,46 @@ def _sharded_quant_dot(x, wq, sw, plan: HadamardPlan, interpret: bool):
     if mesh is None or any(a not in mesh.axis_names for a in plan.mesh_axes):
         return None
     spec_d = plan.mesh_axes if len(plan.mesh_axes) > 1 else plan.mesh_axes[0]
-    local_plan = _build_plan(
-        plan.n, plan.p, plan.dtype, plan.compute_dtype, plan.scale,
-        "xla", plan.epilogue, plan.block_m)
+    local_plan = _strip_mesh(plan)
     epi = plan.epilogue
     lead, d = x.shape[:-1], wq.shape[-1]
     x2 = x.reshape(-1, plan.n)
     sw2 = sw.reshape(1, d).astype(jnp.float32)
+    row_axes = _row_shard_axes(mesh, plan, x2.shape[0])
+    spec_m = row_axes if len(row_axes) > 1 else (
+        row_axes[0] if row_axes else None)
 
-    def local(xl, wl, sl):
-        # the unfused oracle, shard-local: factored rotate (grouped sizes
-        # included), per-token quantize of the FULL row, then the shared
-        # epilogue-dot contraction against this shard's weight columns
-        y = _dispatch_transform(xl, _strip(local_plan), interpret)
-        q, s = registry._quantize_rows(y.astype(jnp.float32), epi.mode)
-        return epilogue_dot(q, s, wl, sl, epi.mode, jnp.dtype(plan.dtype))
+    be = get_backend(local_plan.backend)
+    fused = _qd_fusable(local_plan) and be.quant_dot_fused
+    _LAST_SHARDED_DISPATCH.update(
+        fused=fused, row_axes=row_axes, mesh_axes=plan.mesh_axes,
+        backend=local_plan.backend)
+    if fused:
+        def local(xl, wl, sl):
+            # the rotate-once fused kernel, shard-local: xl is this
+            # shard's rows, wl/sl its weight columns + scales
+            return be.quant_dot(xl, wl, sl, local_plan, interpret)
+    else:
+        _sharded_fallback(
+            "unfused_local",
+            f"shard-local compute for the n={plan.n} {epi.mode} plan runs "
+            f"the unfused oracle (backend {local_plan.backend!r}, "
+            f"grouped={plan.grouped}); the fused rotate-once kernel "
+            "requires the pallas backend, a power-of-2 size within the "
+            "kernel cap, and per-token scales")
+
+        def local(xl, wl, sl):
+            # the unfused oracle, shard-local: factored rotate (grouped
+            # sizes included), per-token quantize of the FULL row, then
+            # the shared epilogue-dot contraction
+            y = _dispatch_transform(xl, _strip(local_plan), interpret)
+            q, s = registry._quantize_rows(y.astype(jnp.float32), epi.mode)
+            return epilogue_dot(q, s, wl, sl, epi.mode, jnp.dtype(plan.dtype))
 
     out = shard_map(
         local, mesh=mesh,
-        in_specs=(P(None, None), P(None, spec_d), P(None, spec_d)),
-        out_specs=P(None, spec_d), check_rep=False,
+        in_specs=(P(spec_m, None), P(None, spec_d), P(None, spec_d)),
+        out_specs=P(spec_m, spec_d), check_rep=False,
     )(x2, wq, sw2)
     return out.reshape(*lead, d)
 
@@ -496,14 +586,28 @@ def _dispatch_quant_dot(x, wq, sw, plan: HadamardPlan, interpret: bool):
     """rotate(x) -> per-token quantize -> contract against the offline-
     quantized weight (int8 w/ int32 accumulation, fp8 w/ f32), applying
     ``scale_x * scale_w`` in the epilogue. Mesh plans dispatch through
-    shard_map over the weight's out-channel shards; fused single-kernel
-    when the plan supports it; otherwise the unfused oracle semantics
-    (grouped transforms, per-tensor scales, backends without the kernel
-    -- the pjit-shardable fallback)."""
+    shard_map -- row-sharded activations over the data axes, the weight's
+    out-channel shards on its mesh axes, the fused rotate-once kernel
+    shard-local; fused single-kernel when the plan supports it; otherwise
+    the unfused oracle semantics (grouped transforms, per-tensor scales,
+    backends without the kernel -- the pjit-shardable fallback)."""
     if plan.mesh_axes and wq.ndim == 2 and plan.epilogue.per_token:
         out = _sharded_quant_dot(x, wq, sw, plan, interpret)
         if out is not None:
             return out
+        _sharded_fallback(
+            "mesh_mismatch",
+            f"plan was built for mesh axes {plan.mesh_axes} but the "
+            "current mesh does not provide them; quant_dot runs the "
+            "replicated single-device path")
+    elif plan.mesh_axes:
+        _sharded_fallback(
+            "unshardable_site",
+            f"plan carries mesh axes {plan.mesh_axes} but the site "
+            "cannot shard_map (needs a 2-D weight and per-token scales; "
+            f"got wq.ndim={wq.ndim}, "
+            f"per_token={plan.epilogue.per_token}); quant_dot runs the "
+            "replicated single-device path")
     if _qd_fusable(plan):
         return get_backend(plan.backend).quant_dot(x, wq, sw, plan, interpret)
     from repro.kernels.quant_dot import epilogue_dot
@@ -695,15 +799,41 @@ def quant_dot(
     return _quant_dot_w(x, w, plan, interpret)
 
 
-# ------------------------------------------------ expert (einsum) consumers
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
-def _quant_dot_experts_qw(x, wq, sw, plan: HadamardPlan, interpret: bool):
-    """Serving einsum form for stacked expert weights: the activation side
-    is the fused rotate+quantize kernel ((q, scales) epilogue); the
-    contraction runs on the real low-precision grids per expert against
-    PRE-quantized weights -- zero per-forward weight quantization. The
-    scales factor out of the einsum exactly (s per token row, sw per
-    (expert, out-channel)). Differentiable in x only (STE)."""
+# ----------------------------------------------------- expert consumers
+def _qd_experts_fusable(plan: HadamardPlan) -> bool:
+    """Can the expert site run as the single 3-D rotate-once kernel?
+    Needs everything ``_qd_fusable`` needs plus a backend hosting the
+    expert kernel, and NO active mesh: under a mesh the expert einsum
+    shards via GSPMD/pjit (a pallas_call would not partition), so the
+    einsum form stays the sharded path -- counted (not warned: it is the
+    designed mesh path, not a regression) in
+    ``TRACE_COUNTS[("sharded_quant_dot", "experts_einsum_on_mesh")]``.
+
+    Like every ``sharding_rules`` consumer (``constrain`` included), the
+    mesh is read from the ambient context AT TRACE TIME: an outer jit
+    traced off-mesh bakes the kernel form, one traced under the mesh
+    bakes the einsum. Launchers key their step functions per mesh
+    (``launch.steps``), so each mesh context traces its own executable."""
+    from repro.distributed.sharding import current_mesh
+
+    be = get_backend(plan.backend)
+    kernel_ok = (_qd_fusable(plan)
+                 and getattr(be, "quant_dot_experts", None) is not None)
+    if kernel_ok and current_mesh() is not None:
+        registry.TRACE_COUNTS[
+            ("sharded_quant_dot", "experts_einsum_on_mesh")] += 1
+        return False
+    return kernel_ok
+
+
+def _experts_einsum_qw(x, wq, sw, plan: HadamardPlan, interpret: bool):
+    """The einsum form of the expert consumer: fused rotate+quantize
+    kernel on the activation side ((q, scales) epilogue, one kernel --
+    all experts share d_ff), then a real low-precision einsum per expert
+    against PRE-quantized weights. The GSPMD-shardable path and the
+    oracle the fused 3-D kernel is tested against. The scales factor out
+    of the einsum exactly (s per token row, sw per
+    (expert, out-channel))."""
     q, s = hadamard(x, plan, interpret=interpret)
     if QSPECS[plan.epilogue.mode][2]:
         acc = jnp.einsum("becf,efd->becd", q.astype(jnp.int8),
@@ -716,6 +846,23 @@ def _quant_dot_experts_qw(x, wq, sw, plan: HadamardPlan, interpret: bool):
                          preferred_element_type=jnp.float32)
     out = acc * s * sw[None]                            # (B,E,c,d)*(1,E,1,d)
     return out.astype(x.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _quant_dot_experts_qw(x, wq, sw, plan: HadamardPlan, interpret: bool):
+    """Serving form for stacked expert weights, PRE-quantized (zero
+    per-forward weight quantization), differentiable in x only (STE).
+
+    Dispatch: the single fused 3-D (expert, rows, out-channels)
+    rotate-once kernel when the plan fuses off-mesh -- rotation,
+    per-token quantize AND the per-expert contraction in ONE pallas_call,
+    no HBM round trip of (q, scales); otherwise the einsum form
+    (``_experts_einsum_qw``: grouped sizes, active meshes via GSPMD,
+    backends without the expert kernel)."""
+    if _qd_experts_fusable(plan):
+        return get_backend(plan.backend).quant_dot_experts(
+            x, wq, sw, plan, interpret)
+    return _experts_einsum_qw(x, wq, sw, plan, interpret)
 
 
 def _qd_experts_qw_fwd(x, wq, sw, plan, interpret):
@@ -771,12 +918,16 @@ _quant_dot_experts_w.defvjp(_qd_experts_w_fwd, _qd_experts_w_bwd)
 
 def quant_dot_experts(x, w, plan: HadamardPlan,
                       interpret: Optional[bool] = None) -> jnp.ndarray:
-    """Per-expert quant_dot: ``einsum('becf,efd->becd')`` with the shared
-    online Hadamard on the dispatched activations (ONE fused
-    rotate+quantize kernel -- all experts share d_ff) and real int8/fp8
-    expert weights with per-(expert, out-channel) scales. ``w`` is the
-    raw (E, f, d) weight (training; STE in both operands) or a
-    pre-quantized QTensor (serving; x-only gradients)."""
+    """Per-expert quant_dot: ``einsum('becf,efd->becd')`` semantics with
+    the shared online Hadamard on the dispatched activations (all experts
+    share d_ff) and real int8/fp8 expert weights with
+    per-(expert, out-channel) scales. Off-mesh fusable plans run the
+    single 3-D (expert, rows, out-channels) rotate-once Pallas kernel --
+    rotation, quantize and every expert's contraction in ONE pallas_call;
+    under a mesh (GSPMD shards the einsum) or for non-fusable plans the
+    einsum form runs. ``w`` is the raw (E, f, d) weight (training; STE in
+    both operands) or a pre-quantized QTensor (serving; x-only
+    gradients)."""
     from repro.core.wquant import QTensor
 
     if interpret is None:
@@ -1001,13 +1152,16 @@ class QuantDotSpec:
 
     # ----------------------------------------------------------- experts
     def bind_experts(self, w, *, interpret: Optional[bool] = None):
-        """Bind the MoE einsum form (``'becf,efd->becd'``, stacked expert
-        weights sharing one d_ff Hadamard); returns ``fn(x)``.
+        """Bind the MoE expert form (``'becf,efd->becd'`` semantics,
+        stacked expert weights sharing one d_ff Hadamard); returns
+        ``fn(x)``.
 
-        The expert path does not use the shard_map dispatch (3-D stacked
-        weights): its einsum is plain XLA and shards under GSPMD/pjit via
-        the surrounding constraints instead. ``weight_axes`` is carried
-        as declarative metadata only at this site today."""
+        Off-mesh, fusable plans run the single 3-D rotate-once Pallas
+        kernel (one pallas_call for rotation + quantize + every expert's
+        contraction). Under a mesh the einsum form runs instead and
+        shards under GSPMD/pjit via the surrounding constraints (the
+        shard_map dispatch is 2-D-only). ``weight_axes`` is carried as
+        declarative metadata only at this site today."""
         from repro.core.wquant import QTensor
 
         w = self._coerce_weight(w)

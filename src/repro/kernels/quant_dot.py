@@ -1,15 +1,13 @@
 """Fused rotate -> quantize -> GEMM consumer kernel (the quantized hot
-path, end to end in low precision).
+path, end to end in low precision) with a ROTATE-ONCE grid schedule.
 
 The paper's kernel makes the online rotation cheap; its *consumer* is a
 quantized matmul (QuaRot down-proj, FP8 attention). PR 1 fused the
 rotation with the quantize epilogue so the quantized tensor is the only
 HBM output -- but the consumer GEMM still read it back from HBM and the
-models fake-quantized both operands in f32. This kernel closes the loop:
-one grid step rotates a (block_m, n) row block in the plan's compute
-dtype (bf16/fp16 multiplies, f32 MXU accumulation -- the
-Markidis / Ootomo recipe), quantizes it per token, and immediately
-contracts it against an offline-quantized weight tile:
+models fake-quantized both operands in f32. PR 3 closed that loop with a
+2D (row blocks x out-channel blocks) grid whose every step rotated the
+row block, quantized it, and contracted it against one weight tile:
 
   * int8 operands with int32 MXU accumulation (``preferred_element_type``)
   * fp8 operands multiplied exactly in bf16 (both fp8 grids embed exactly:
@@ -19,10 +17,37 @@ contracts it against an offline-quantized weight tile:
 applying ``scale_x * scale_w`` in the epilogue. The rotated/quantized
 activations never round-trip through HBM.
 
-Grid: 2D over (row blocks, out-channel blocks). The rotation+quantize of
-a row block is recomputed per out-channel block -- compute the transform
-trades for HBM traffic exactly as the paper's roofline argues (the
-transform is ~k*128 flops/element vs. an n-element tile re-read).
+PR 3's schedule, however, recomputed the rotate+quantize of each
+(block_m, n) row block for EVERY out-channel tile j -- multiplying the
+transform work by d/block_n (~8x at n=4096, d=4*4096) when the paper's
+roofline argues the transform should cost ~k*128 flops/element ONCE per
+row. The default schedule here is **rotate-once**:
+
+  * the out-channel axis j is the INNERMOST grid axis and is declared
+    sequential (``dimension_semantics=("parallel", "arbitrary")``): for a
+    fixed row block i, the kernel visits j = 0, 1, ..., d/bn - 1 in order;
+  * at j == 0 the row block is rotated in the plan's compute dtype
+    (bf16/fp16 multiplies, f32 MXU accumulation -- the Markidis / Ootomo
+    recipe), per-token quantized, and the DOT-OPERAND form of (q, s) is
+    stashed in VMEM ``scratch_shapes`` (int8 for the int path, the exact
+    bf16 embedding for fp8 -- so the scratch is also the cheapest legal
+    operand representation);
+  * every j (including 0) contracts the scratch operand against its
+    (n, block_n) weight tile. The scratch outlives the j loop of its row
+    block by construction (scratch persists across grid steps; j is
+    sequential within each i), so each row is transformed exactly once
+    regardless of d.
+
+The PR-3 ``revisit`` schedule is kept selectable (``schedule="revisit"``
+or ``REPRO_QUANT_DOT_SCHEDULE=revisit``) as the A/B baseline for the
+transform-amortization benchmark; both schedules are bitwise identical
+for int8 (the rotation/quantize/contraction math is unchanged -- only
+*when* the transform runs differs).
+
+``pallas_quant_dot_experts`` extends the same schedule to the stacked
+MoE expert weights on a 3-D (expert, row blocks, out-channel blocks)
+grid, so the expert consumer stops splitting into a rotate+quantize
+kernel plus a per-expert XLA einsum.
 
 ``epilogue_dot`` is the single source of truth for the quantized-GEMM
 math; the unfused fallback (grouped transforms, per-tensor scales,
@@ -32,10 +57,12 @@ it so fused and unfused paths agree bit-for-bit in the contraction.
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.hadamard import _apply_passes
 from repro.kernels.registry import (
@@ -49,8 +76,9 @@ from repro.kernels.registry import (
     _xla_transform,
 )
 
-__all__ = ["pallas_quant_dot", "xla_quant_dot", "epilogue_dot",
-           "quant_dot_blocks"]
+__all__ = ["pallas_quant_dot", "pallas_quant_dot_experts", "xla_quant_dot",
+           "epilogue_dot", "quant_dot_blocks", "SCHEDULE_ENV_VAR",
+           "SCHEDULES"]
 
 _CONTRACT = (((1,), (0,)), ((), ()))  # plain (m, k) @ (k, n)
 
@@ -63,6 +91,32 @@ _INT32_SAFE_K = 1 << 17
 # plus the exact bf16 embedding the dot runs in.
 _FP8_OPERAND_BYTES = 3
 
+SCHEDULE_ENV_VAR = "REPRO_QUANT_DOT_SCHEDULE"
+SCHEDULES = ("rotate_once", "revisit")
+
+
+def _operand_from_q(q, mode):
+    """Cast ``_quantize_rows`` output to the grid the contraction runs on:
+    int8 for the int path (int32 MXU accumulation), the exact bf16
+    embedding of the fp8 grid otherwise. This is the representation the
+    rotate-once schedule stashes in VMEM scratch -- 1 (int8) or 2 (bf16)
+    bytes/element, and directly consumable by every subsequent weight
+    tile."""
+    if QSPECS[mode][2]:
+        return q.astype(jnp.int8)
+    return q.astype(QSPECS[mode][1]).astype(jnp.bfloat16)
+
+
+def _operand_dot(a, wq, mode):
+    """Contract a dot-operand activation block (``_operand_from_q`` form)
+    against the storage-dtype weight tile. Returns f32."""
+    if QSPECS[mode][2]:
+        acc = jax.lax.dot_general(a, wq.astype(jnp.int8), _CONTRACT,
+                                  preferred_element_type=jnp.int32)
+        return acc.astype(jnp.float32)
+    return jax.lax.dot_general(a, wq.astype(jnp.bfloat16), _CONTRACT,
+                               preferred_element_type=jnp.float32)
+
 
 def _low_precision_dot(q, wq, mode):
     """The quantized contraction on the mode's native arithmetic: int8
@@ -70,22 +124,13 @@ def _low_precision_dot(q, wq, mode):
     bf16 (exact) and accumulate f32. ``q`` comes from ``_quantize_rows``
     pre-cast (f32 values on the grid). Returns f32."""
     is_int = QSPECS[mode][2]
-    if is_int and q.shape[-1] <= _INT32_SAFE_K:
-        acc = jax.lax.dot_general(
-            q.astype(jnp.int8), wq.astype(jnp.int8), _CONTRACT,
-            preferred_element_type=jnp.int32)
-        return acc.astype(jnp.float32)
-    if is_int:
+    if is_int and q.shape[-1] > _INT32_SAFE_K:
         # contraction too long for exact int32: f32 accumulation of the
         # exact grid products (values <= 127 are f32-exact)
         return jax.lax.dot_general(
             q, wq.astype(jnp.float32), _CONTRACT,
             preferred_element_type=jnp.float32)
-    qdt = QSPECS[mode][1]
-    a = q.astype(qdt).astype(jnp.bfloat16)
-    b = wq.astype(jnp.bfloat16)
-    return jax.lax.dot_general(a, b, _CONTRACT,
-                               preferred_element_type=jnp.float32)
+    return _operand_dot(_operand_from_q(q, mode), wq, mode)
 
 
 def epilogue_dot(q, s, wq, sw, mode: str, out_dtype) -> jnp.ndarray:
@@ -99,67 +144,155 @@ def epilogue_dot(q, s, wq, sw, mode: str, out_dtype) -> jnp.ndarray:
     return (acc * s * sw.reshape((1,) * len(lead) + (d,))).astype(out_dtype)
 
 
+def _operand_bytes(mode: str) -> int:
+    """Bytes/element of the scratch-resident dot operand (int8 grid or
+    bf16 fp8-embedding)."""
+    return 1 if QSPECS[mode][2] else 2
+
+
 def quant_dot_blocks(n: int, d: int, m: int, dtype, compute_dtype,
-                     mode: str):
+                     mode: str, block_m=None, block_n=None):
     """(block_m, block_n) for the fused kernel, charging every VMEM
-    resident: input tile + compute-dtype copy + quantized operand copy per
-    row, the (n, block_n) weight tile, the (block_m, block_n) output tile,
-    and the per-out-channel scales."""
+    resident of the rotate-once schedule: the input tile + compute-dtype
+    working copy per row, the SCRATCH dot-operand tile (int8 / bf16) + the
+    per-row f32 scale that live across the j loop, the (n, block_n)
+    weight tile, the (block_m, block_n) output tile, and the
+    per-out-channel scales.
+
+    A user-pinned ``block_m`` (``plan.block_m``) is honored BEFORE any
+    sizing decision, so the weight-tile / ``block_n`` tradeoff is
+    computed against the row count that will actually run -- not against
+    a heuristic ``bm`` that the pin then overrides. ``block_n`` pins the
+    out-channel tile the same way (benchmarks use it to hold the revisit
+    count fixed across schedules).
+
+    Because the rotate-once schedule makes weight-tile revisits free of
+    transform recompute, ``block_n`` is allowed up to 1024 (PR 3 capped
+    it at 512 to keep the per-revisit transform bill bounded)."""
     in_b = jnp.dtype(dtype).itemsize
     cb = jnp.dtype(compute_dtype).itemsize
     is_int = QSPECS[mode][2]
-    # quantized-operand bytes/element: the 1-byte storage grid, plus the
-    # exact bf16 embedding both fp8 operands run the dot in
-    qb = 1 if is_int else _FP8_OPERAND_BYTES
+    qb = _operand_bytes(mode)       # scratch operand bytes/element
     wb = 1 if is_int else _FP8_OPERAND_BYTES
-    bn = min(512, -(-d // 128) * 128)
-    # keep the weight tile at most half the budget (it is revisited per
-    # row block, so oversizing it starves block_m); step in 128-lane
-    # multiples so the BlockSpec last dim stays MXU-tiled
-    while n * bn * wb > _VMEM_BUDGET_BYTES // 2 and bn > 128:
-        bn -= 128
-    per_row = n * (in_b + cb + qb) + bn * in_b + 4
+    # per-row residents independent of bn: input tile + compute copy +
+    # scratch operand + f32 scratch scale
+    row_fixed = n * (in_b + cb + qb) + 4
+    # bn always steps in 128-lane multiples so the BlockSpec last dim
+    # stays MXU-tiled
+    bn = min(1024, -(-d // 128) * 128) if block_n is None else block_n
+    if block_m is not None:
+        if block_n is None:
+            # pinned rows: the weight/output/sw tiles get everything the
+            # rows leave
+            avail = _VMEM_BUDGET_BYTES - block_m * row_fixed
+            while bn > 128 and bn * (n * wb + block_m * in_b + 4) > avail:
+                bn -= 128
+        return block_m, bn
+    if block_n is None:
+        # joint sizing: cap the weight tile at half the budget (oversizing
+        # it starves block_m), then size the rows from the remainder
+        while n * bn * wb > _VMEM_BUDGET_BYTES // 2 and bn > 128:
+            bn -= 128
+    per_row = row_fixed + bn * in_b
     bm = max(8, (_VMEM_BUDGET_BYTES - n * bn * wb) // per_row)
     bm = min(bm, 256, m)
     sub = 16 if in_b == 2 else 8
     return max(sub, (bm // sub) * sub), bn
 
 
-def _quant_dot_kernel(x_ref, mats_ref, wq_ref, sw_ref, o_ref, *, n: int,
-                      mode: str, compute_dtype):
-    """One grid step: rotate a (block_m, n) row block in the compute
-    dtype, per-token quantize, contract against the (n, block_n) weight
-    tile, scale, write back -- the (block_m, block_n) output tile is the
-    only HBM write."""
-    x = x_ref[...].astype(compute_dtype)
+def _rotate_quantize_block(x, mats_ref, *, n: int, mode: str,
+                           compute_dtype):
+    """The shared transform+quantize stage: rotate a (block_m, n) row
+    block in the compute dtype (f32 MXU accumulation) and per-token
+    quantize. Returns ``(q, s)`` with q in ``_quantize_rows``'s pre-cast
+    f32-grid form."""
+    x = x.astype(compute_dtype)
     bm = x.shape[0]
     mats = [mats_ref[p] for p in range(mats_ref.shape[0])]
     y = _apply_passes(x.reshape(bm, n), n, mats)
-    q, s = _quantize_rows(y.astype(jnp.float32), mode)
-    acc = _low_precision_dot(q, wq_ref[...], mode)
+    return _quantize_rows(y.astype(jnp.float32), mode)
+
+
+def _quant_dot_kernel_rotate_once(x_ref, mats_ref, wq_ref, sw_ref, o_ref,
+                                  q_ref, s_ref, *, n: int, mode: str,
+                                  compute_dtype):
+    """Rotate-once grid step. The out-channel axis j (innermost,
+    sequential) revisits the same row block i with consecutive weight
+    tiles; the rotation + per-token quantization run ONLY at j == 0 and
+    their dot-operand form is stashed in VMEM scratch (``q_ref``: int8 or
+    bf16 fp8-embedding, ``s_ref``: f32 per-row scales). Every j contracts
+    the scratch operand against its (n, block_n) weight tile -- so each
+    row is transformed exactly once regardless of d. Scratch persists
+    across grid steps and j is sequential within each i, so the j == 0
+    write is visible to every later j of that row block (and rows blocks
+    may still run in parallel across cores: each partition owns its own
+    scratch and walks its own j loop in order)."""
+
+    @pl.when(pl.program_id(1) == 0)
+    def _rotate():
+        q, s = _rotate_quantize_block(x_ref[...], mats_ref, n=n, mode=mode,
+                                      compute_dtype=compute_dtype)
+        q_ref[...] = _operand_from_q(q, mode)
+        s_ref[...] = s
+
+    acc = _operand_dot(q_ref[...], wq_ref[...], mode)
+    o_ref[...] = (acc * s_ref[...] * sw_ref[...]).astype(o_ref.dtype)
+
+
+def _quant_dot_kernel_revisit(x_ref, mats_ref, wq_ref, sw_ref, o_ref, *,
+                              n: int, mode: str, compute_dtype):
+    """The PR-3 schedule, kept as the A/B baseline: EVERY grid step
+    rotates + quantizes its row block before contracting -- d/block_n
+    redundant transforms per row. Bitwise identical outputs to the
+    rotate-once kernel (same math, different schedule)."""
+    q, s = _rotate_quantize_block(x_ref[...], mats_ref, n=n, mode=mode,
+                                  compute_dtype=compute_dtype)
+    acc = _operand_dot(_operand_from_q(q, mode), wq_ref[...], mode)
     o_ref[...] = (acc * s * sw_ref[...]).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("plan", "interpret"))
-def pallas_quant_dot(x, wq, sw, plan, interpret: bool):
+def _resolve_schedule(schedule) -> str:
+    if schedule is None:
+        schedule = os.environ.get(SCHEDULE_ENV_VAR) or "rotate_once"
+    if schedule not in SCHEDULES:
+        raise ValueError(
+            f"unknown quant_dot schedule {schedule!r}; expected one of "
+            f"{SCHEDULES}")
+    return schedule
+
+
+def pallas_quant_dot(x, wq, sw, plan, interpret: bool, schedule=None,
+                     block_n=None):
     """Fused single-kernel rotate+quantize+GEMM over a 2D Pallas grid.
 
     x: (..., n) with n == plan.p (power of 2); wq: (n, d) storage-dtype
     weight; sw: (1, d) or (d,) f32 per-out-channel scales. Returns
     (..., d) in the plan's io dtype.
+
+    ``schedule`` selects the grid schedule (default ``"rotate_once"``,
+    overridable via ``REPRO_QUANT_DOT_SCHEDULE``); ``block_n`` pins the
+    out-channel tile (benchmark A/Bs hold the revisit count fixed with
+    it). Both are static.
     """
+    return _pallas_quant_dot(x, wq, sw, plan, interpret,
+                             _resolve_schedule(schedule), block_n)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "interpret", "schedule",
+                                             "block_n"))
+def _pallas_quant_dot(x, wq, sw, plan, interpret: bool, schedule: str,
+                      block_n):
     TRACE_COUNTS[("pallas", "quant_dot")] += 1
     n = plan.p
     mode = plan.epilogue.mode
+    cd = jnp.dtype(plan.compute_dtype)
     mats = _plan_mats(plan)
     lead = x.shape[:-1]
     x2, m = _rows(x, n)
     d = wq.shape[-1]
     sw2 = sw.reshape(1, d).astype(jnp.float32)
-    bm, bn = quant_dot_blocks(
-        n, d, m, x.dtype, jnp.dtype(plan.compute_dtype), mode)
-    if plan.block_m:
-        bm = plan.block_m
+    bm, bn = quant_dot_blocks(n, d, m, x.dtype, cd, mode,
+                              block_m=plan.block_m, block_n=block_n)
     x2, _ = _pad_rows(x2, bm)
     pad_d = (-d) % bn
     if pad_d:
@@ -168,9 +301,14 @@ def pallas_quant_dot(x, wq, sw, plan, interpret: bool):
     else:
         wq2 = wq
     mp, dp = x2.shape[0], d + pad_d
-    kernel = functools.partial(
-        _quant_dot_kernel, n=n, mode=mode,
-        compute_dtype=jnp.dtype(plan.compute_dtype))
+    common = dict(n=n, mode=mode, compute_dtype=cd)
+    if schedule == "rotate_once":
+        kernel = functools.partial(_quant_dot_kernel_rotate_once, **common)
+        scratch = [pltpu.VMEM((bm, n), _scratch_dtype(mode)),
+                   pltpu.VMEM((bm, 1), jnp.float32)]
+    else:
+        kernel = functools.partial(_quant_dot_kernel_revisit, **common)
+        scratch = []
     out = pl.pallas_call(
         kernel,
         grid=(mp // bm, dp // bn),
@@ -183,9 +321,97 @@ def pallas_quant_dot(x, wq, sw, plan, interpret: bool):
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, dp), jnp.dtype(plan.dtype)),
+        scratch_shapes=scratch,
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x2, mats, wq2, sw2)
     return out[:m, :d].reshape(*lead, d)
+
+
+def _scratch_dtype(mode: str):
+    return jnp.int8 if QSPECS[mode][2] else jnp.bfloat16
+
+
+def _quant_dot_experts_kernel(x_ref, mats_ref, wq_ref, sw_ref, o_ref,
+                              q_ref, s_ref, *, n: int, mode: str,
+                              compute_dtype):
+    """Rotate-once grid step on the 3-D (expert, row blocks, out-channel
+    blocks) grid: identical to the dense kernel except every ref carries
+    a leading per-expert axis of 1. j (innermost) is sequential, so the
+    scratch written at j == 0 serves every weight tile of that
+    (expert, row block) pair."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _rotate():
+        q, s = _rotate_quantize_block(x_ref[0], mats_ref, n=n, mode=mode,
+                                      compute_dtype=compute_dtype)
+        q_ref[...] = _operand_from_q(q, mode)
+        s_ref[...] = s
+
+    acc = _operand_dot(q_ref[...], wq_ref[0], mode)
+    o_ref[0] = (acc * s_ref[...] * sw_ref[0]).astype(o_ref.dtype)
+
+
+def pallas_quant_dot_experts(x, wq, sw, plan, interpret: bool):
+    """Fused rotate+quantize+GEMM for stacked expert weights: ONE kernel
+    over a 3-D (expert, row blocks, out-channel blocks) grid with the
+    rotate-once schedule per (expert, row block) -- replacing the PR-4
+    split into a fused rotate+quantize kernel plus a per-expert XLA
+    einsum (which round-tripped (q, scales) through HBM).
+
+    x: (..., E, c, n) dispatched activations; wq: (E, n, d) storage-dtype
+    expert weights; sw: (E, 1, d) f32 per-(expert, out-channel) scales.
+    Returns (..., E, c, d) in the plan's io dtype.
+    """
+    return _pallas_quant_dot_experts(x, wq, sw, plan, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "interpret"))
+def _pallas_quant_dot_experts(x, wq, sw, plan, interpret: bool):
+    TRACE_COUNTS[("pallas", "quant_dot_experts")] += 1
+    n = plan.p
+    mode = plan.epilogue.mode
+    cd = jnp.dtype(plan.compute_dtype)
+    mats = _plan_mats(plan)
+    E, _, d = wq.shape
+    lead, cap = x.shape[:-3], x.shape[-2]
+    # rows of one expert contiguous: (..., E, c, n) -> (E, rows, n)
+    x3 = jnp.moveaxis(x.reshape(-1, E, cap, n), 1, 0).reshape(E, -1, n)
+    m = x3.shape[1]
+    sw3 = sw.reshape(E, 1, d).astype(jnp.float32)
+    bm, bn = quant_dot_blocks(n, d, m, x.dtype, cd, mode,
+                              block_m=plan.block_m)
+    pad_m, pad_d = (-m) % bm, (-d) % bn
+    if pad_m:
+        x3 = jnp.pad(x3, ((0, 0), (0, pad_m), (0, 0)))
+    wq3 = wq
+    if pad_d:
+        wq3 = jnp.pad(wq, ((0, 0), (0, 0), (0, pad_d)))
+        sw3 = jnp.pad(sw3, ((0, 0), (0, 0), (0, pad_d)))
+    mp, dp = m + pad_m, d + pad_d
+    kernel = functools.partial(_quant_dot_experts_kernel, n=n, mode=mode,
+                               compute_dtype=cd)
+    out = pl.pallas_call(
+        kernel,
+        grid=(E, mp // bm, dp // bn),
+        in_specs=[
+            pl.BlockSpec((1, bm, n), lambda e, i, j: (e, i, 0)),
+            pl.BlockSpec((mats.shape[0],) + mats.shape[1:],
+                         lambda e, i, j: (0, 0, 0)),
+            pl.BlockSpec((1, n, bn), lambda e, i, j: (e, 0, j)),
+            pl.BlockSpec((1, 1, bn), lambda e, i, j: (e, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda e, i, j: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, mp, dp), jnp.dtype(plan.dtype)),
+        scratch_shapes=[pltpu.VMEM((bm, n), _scratch_dtype(mode)),
+                        pltpu.VMEM((bm, 1), jnp.float32)],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x3, mats, wq3, sw3)
+    out = jnp.moveaxis(out[:, :m, :d].reshape(E, -1, cap, d), 0, 1)
+    return out.reshape(*lead, E, cap, d)
 
 
 @functools.partial(jax.jit, static_argnames=("plan", "interpret"))

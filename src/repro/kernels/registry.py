@@ -74,7 +74,10 @@ QSPECS = {
 
 # (backend, kind) -> number of times the jitted implementation was TRACED
 # (i.e. compiled). Plan-cache tests assert repeated same-shape calls do not
-# grow these counters.
+# grow these counters. The sharded quant_dot dispatcher also counts its
+# trace-time fallback decisions here under ("sharded_quant_dot", <reason>)
+# keys -- see ``core.api._sharded_fallback`` -- so a mesh plan silently
+# losing the fused/sharded hot path is observable in tests and debugging.
 TRACE_COUNTS: collections.Counter = collections.Counter()
 
 
@@ -182,6 +185,14 @@ class Backend:
     # Optional rotate+quantize+GEMM consumer path (None = dispatcher falls
     # back to transform + shared unfused epilogue-dot math).
     quant_dot = None
+    # Optional fused consumer for stacked (E, n, d) expert weights (the
+    # 3-D rotate-once grid); None = per-expert einsum fallback.
+    quant_dot_experts = None
+    # Does ``quant_dot`` run as ONE kernel (rotation, quantize and GEMM
+    # fused)? False means the hosted quant_dot is the unfused oracle
+    # semantics (xla) -- the sharded dispatcher uses this to warn when a
+    # mesh plan silently loses the fused hot path.
+    quant_dot_fused = False
 
 
 # ---------------------------------------------------------------- kernels
@@ -365,6 +376,7 @@ def _pallas_fused_dequant(x, plan, interpret: bool):
 class PallasBackend(Backend):
     name = "pallas"
     priority = 20
+    quant_dot_fused = True
 
     def supports(self, p: int) -> bool:
         return p <= MAX_KERNEL_SIZE
@@ -383,6 +395,11 @@ class PallasBackend(Backend):
         from repro.kernels.quant_dot import pallas_quant_dot
 
         return pallas_quant_dot(x, wq, sw, plan, interpret)
+
+    def quant_dot_experts(self, x, wq, sw, plan, interpret):
+        from repro.kernels.quant_dot import pallas_quant_dot_experts
+
+        return pallas_quant_dot_experts(x, wq, sw, plan, interpret)
 
 
 # -------------------------------------------------------------------- xla

@@ -56,10 +56,14 @@ def apply_mlp(cfg, p, x):
     h = constrain(h, "batch", "seq", "dff")
     # ---- the paper's online rotation: Hadamard on the down_proj input,
     # fused with the activation quantization AND the int8/fp8 down-proj
-    # GEMM in one quant_dot kernel when the plan supports it. The site is
+    # GEMM in one rotate-once quant_dot kernel when the plan supports it
+    # (each row block is transformed exactly once and served to every
+    # weight tile from VMEM scratch -- DESIGN.md section 8). The site is
     # declared as a spec and bound to the weight: a raw weight quantizes
     # on the fly (training), a pre-quantized QTensor is consumed directly
-    # (serving -- zero per-forward weight quantization) ----
+    # (serving -- zero per-forward weight quantization). Under a mesh the
+    # dispatch shard_maps: activations row-sharded over the data axes,
+    # weight columns + scales over 'fsdp', the fused kernel shard-local ----
     spec = QuantDotSpec.for_config(h.shape[-1], qc, weight_axes=_DOWN_AXES)
     y = spec.bind(p["w_down"])(h)
     return constrain(y, "batch", "seq", None)
@@ -126,11 +130,13 @@ def apply_moe(cfg, p, x):
     h = _act(cfg, g) * u
     h = constrain(h, "moebatch", "experts", None, "dff")
     # shared online Hadamard (all experts share d_ff) + REAL int8/fp8
-    # expert down-proj: one fused rotate+quantize kernel feeding a
-    # low-precision einsum with int32/f32 accumulation -- no f32
-    # fake-quant on the hot path. Pre-quantized QTensor expert weights
-    # (per-(expert, out-channel) scales) are consumed directly. The
-    # expert einsum shards under GSPMD (not the 2-D shard_map dispatch);
+    # expert down-proj with int32/f32 accumulation -- no f32 fake-quant
+    # on the hot path. Off-mesh this is ONE 3-D rotate-once pallas
+    # kernel (rotation + quantize + every expert's contraction, no HBM
+    # round trip of (q, scales) -- DESIGN.md section 8); under a mesh
+    # the einsum form runs and shards under GSPMD (not the 2-D
+    # shard_map dispatch). Pre-quantized QTensor expert weights
+    # (per-(expert, out-channel) scales) are consumed directly;
     # weight_axes here is declarative metadata for the site.
     spec = QuantDotSpec.for_config(h.shape[-1], qc,
                                    weight_axes=_EXPERT_DOWN_AXES)

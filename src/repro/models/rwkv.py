@@ -238,9 +238,12 @@ def apply_rwkv_cmix(cfg, p, x, x_prev=None, *, return_state: bool = False):
     k = constrain(k, "batch", "seq", "dff")
     # the paper's online rotation point (down-projection input): rotate +
     # per-token quantize + the real int8/fp8 contraction run as one fused
-    # quant_dot kernel when the plan supports it (no f32 fake-quant, no
-    # HBM round trip of the rotated tensor). Declared as a spec: a
-    # pre-quantized QTensor 'wv' is consumed directly on the serving path.
+    # rotate-once quant_dot kernel when the plan supports it (no f32
+    # fake-quant, no HBM round trip of the rotated tensor, each row block
+    # transformed once for ALL weight tiles -- DESIGN.md section 8).
+    # Declared as a spec: a pre-quantized QTensor 'wv' is consumed
+    # directly on the serving path; under a mesh the dispatch shard_maps
+    # with row-sharded activations and the fused kernel shard-local.
     spec = QuantDotSpec.for_config(k.shape[-1], cfg.quant,
                                    weight_axes=("dff", "fsdp"))
     y = r * spec.bind(p["wv"])(k)

@@ -1,3 +1,4 @@
+import os
 import subprocess
 import sys
 
@@ -6,8 +7,6 @@ import pytest
 try:  # real hypothesis when available ...
     import hypothesis  # noqa: F401
 except ImportError:  # ... deterministic fallback otherwise (see module doc)
-    import os
-
     sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
     from _hypothesis_stub import build_module
 
@@ -22,14 +21,21 @@ def run_py_subprocess(code: str, devices: int = 8, timeout: int = 600):
     Multi-device tests need this because jax locks the device count at
     first init; the main pytest process keeps the default single device
     (per the dry-run isolation requirement)."""
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env = {
         "XLA_FLAGS": f"--xla_force_host_platform_device_count={devices}",
-        "PYTHONPATH": "src",
-        "PATH": "/usr/bin:/bin:/usr/local/bin",
-        "HOME": "/root",
+        "PYTHONPATH": os.path.join(repo_root, "src"),
+        "PATH": os.environ.get("PATH", "/usr/bin:/bin:/usr/local/bin"),
+        "HOME": os.environ.get("HOME", "/root"),
     }
+    # propagate the parent's platform pin: in sandboxes where jax's
+    # platform auto-discovery hangs (plugin probes), the runner exports
+    # JAX_PLATFORMS=cpu -- dropping it here would stall EVERY subprocess
+    # for minutes at first backend init
+    if "JAX_PLATFORMS" in os.environ:
+        env["JAX_PLATFORMS"] = os.environ["JAX_PLATFORMS"]
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True, timeout=timeout, env=env, cwd="/root/repo")
+                       text=True, timeout=timeout, env=env, cwd=repo_root)
     if r.returncode != 0:
         raise AssertionError(f"subprocess failed:\nSTDOUT:{r.stdout}\nSTDERR:{r.stderr}")
     return r.stdout

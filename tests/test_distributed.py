@@ -222,6 +222,148 @@ print("SERVE_QTENSOR_OK")
     assert "SERVE_QTENSOR_OK" in out
 
 
+def test_sharded_quant_dot_fused_shard_local_2dev(subproc):
+    """PR 5 acceptance: on a 2-device mesh the shard-local compute is the
+    FUSED rotate-once Pallas kernel (not the unfused xla oracle) with the
+    activation row-sharded over the data axes, bitwise-int8 vs the
+    single-device kernel, per-shard weight scales preserved."""
+    out = subproc("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import api
+from repro.core.api import quant_dot
+from repro.core.wquant import quantize_weight
+from repro.distributed import sharding as shd
+from repro.kernels import registry
+
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.standard_normal((16, 256)), jnp.float32)
+w = jnp.asarray(rng.standard_normal((256, 128)) * 0.05, jnp.float32)
+qt = quantize_weight(w, "int8")
+ref = quant_dot(x, qt, mode="int8", backend="pallas")     # single device
+mesh = jax.make_mesh((1, 2), ("data", "model"))
+unfused_before = registry.TRACE_COUNTS[("sharded_quant_dot", "unfused_local")]
+kernel_before = registry.TRACE_COUNTS[("pallas", "quant_dot")]
+with shd.sharding_rules(mesh):
+    out = quant_dot(x, qt, mode="int8", backend="pallas",
+                    weight_axes=(None, "dff"))
+assert (np.asarray(out) == np.asarray(ref)).all()         # bitwise int8
+disp = api._LAST_SHARDED_DISPATCH
+assert disp["fused"] and disp["backend"] == "pallas", disp
+assert disp["mesh_axes"] == ("model",), disp
+assert disp["row_axes"] == ("data",), disp                # row-sharded in_spec
+# the fused kernel really traced shard-locally; no unfused fallback count
+assert registry.TRACE_COUNTS[("pallas", "quant_dot")] == kernel_before + 1
+assert registry.TRACE_COUNTS[("sharded_quant_dot", "unfused_local")] == unfused_before
+
+# per-shard weight scales are genuinely used on the fused path too
+sw2 = qt.scale.at[:, 64:].mul(2.0)
+with shd.sharding_rules(mesh):
+    o1 = quant_dot(x, (qt.q, qt.scale), mode="int8", backend="pallas",
+                   weight_axes=(None, "dff"))
+    o2 = quant_dot(x, (qt.q, sw2), mode="int8", backend="pallas",
+                   weight_axes=(None, "dff"))
+assert (np.asarray(o1[:, :64]) == np.asarray(o2[:, :64])).all()
+assert not (np.asarray(o1[:, 64:]) == np.asarray(o2[:, 64:])).all()
+print("FUSED_SHARD_LOCAL_OK")
+""", devices=2)
+    assert "FUSED_SHARD_LOCAL_OK" in out
+
+
+def test_sharded_quant_dot_row_sharded_4dev(subproc):
+    """(2,2) mesh: rows genuinely split over the data axis (2 shards x 8
+    rows) while the weight splits over model -- each device rotates only
+    its rows and the assembled output is bitwise the single-device int8
+    result. Rows not divisible by the data axis drop the row constraint
+    (divisibility guard) but still compute correctly."""
+    out = subproc("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import api
+from repro.core.api import quant_dot
+from repro.core.wquant import quantize_weight
+from repro.distributed import sharding as shd
+
+rng = np.random.default_rng(1)
+w = jnp.asarray(rng.standard_normal((256, 128)) * 0.05, jnp.float32)
+qt = quantize_weight(w, "int8")
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+for rows, want_axes in ((16, ("data",)), (9, ())):
+    x = jnp.asarray(rng.standard_normal((rows, 256)), jnp.float32)
+    ref = quant_dot(x, qt, mode="int8", backend="pallas")
+    with shd.sharding_rules(mesh):
+        out = quant_dot(x, qt, mode="int8", backend="pallas",
+                        weight_axes=(None, "dff"))
+    assert (np.asarray(out) == np.asarray(ref)).all(), rows
+    assert api._LAST_SHARDED_DISPATCH["row_axes"] == want_axes, (
+        rows, api._LAST_SHARDED_DISPATCH)
+print("ROW_SHARDED_OK")
+""", devices=4)
+    assert "ROW_SHARDED_OK" in out
+
+
+def test_sharded_quant_dot_fallbacks_are_observable(subproc):
+    """Satellite: a mesh plan silently losing the sharded/fused hot path
+    warns once per process per reason and bumps a TRACE_COUNTS counter
+    every time -- both for unfused shard-local compute (xla backend) and
+    for a plan whose mesh axes the current mesh does not provide."""
+    out = subproc("""
+import warnings
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.api import QuantEpilogue, plan_for, quant_dot
+from repro.core.wquant import quantize_weight
+from repro.distributed import sharding as shd
+from repro.kernels import registry
+
+rng = np.random.default_rng(2)
+x = jnp.asarray(rng.standard_normal((8, 256)), jnp.float32)
+qt = quantize_weight(
+    jnp.asarray(rng.standard_normal((256, 128)) * 0.05, jnp.float32), "int8")
+mesh = jax.make_mesh((2,), ("model",))
+
+key_u = ("sharded_quant_dot", "unfused_local")
+with warnings.catch_warnings(record=True) as wl:
+    warnings.simplefilter("always")
+    before = registry.TRACE_COUNTS[key_u]
+    with shd.sharding_rules(mesh):
+        quant_dot(x, qt, mode="int8", backend="xla", weight_axes=(None, "dff"))
+        quant_dot(x.astype(jnp.float32) * 2, qt, mode="int8", backend="xla",
+                  weight_axes=(None, "dff"))
+# counted at every dispatch (eager calls dispatch per call; under jit,
+# once per trace) -- but WARNED only once
+assert registry.TRACE_COUNTS[key_u] == before + 2
+msgs = [str(v.message) for v in wl if "unfused_local" in str(v.message)]
+assert len(msgs) == 1 and "xla" in msgs[0], msgs   # warn-once
+
+key_m = ("sharded_quant_dot", "mesh_mismatch")
+plan = plan_for(256, backend="pallas", epilogue=QuantEpilogue("int8"),
+                mesh_axes=("model",))
+ref = quant_dot(x, qt, mode="int8", backend="pallas")
+with warnings.catch_warnings(record=True) as wl:
+    warnings.simplefilter("always")
+    before = registry.TRACE_COUNTS[key_m]
+    out = quant_dot(x, (qt.q, qt.scale), plan)     # no active mesh
+assert registry.TRACE_COUNTS[key_m] == before + 1
+assert any("mesh_mismatch" in str(v.message) for v in wl)
+assert (np.asarray(out) == np.asarray(ref)).all()  # fallback is correct
+
+# per-tensor scales can't shard_map: the mesh plan must record the
+# unshardable site instead of silently running replicated
+key_s = ("sharded_quant_dot", "unshardable_site")
+plan_pt = plan_for(256, backend="xla",
+                   epilogue=QuantEpilogue("int8", per_token=False),
+                   mesh_axes=("model",))
+with warnings.catch_warnings(record=True) as wl:
+    warnings.simplefilter("always")
+    before = registry.TRACE_COUNTS[key_s]
+    with shd.sharding_rules(mesh):
+        outp = quant_dot(x, (qt.q, qt.scale), plan_pt)
+assert registry.TRACE_COUNTS[key_s] == before + 1
+assert any("unshardable_site" in str(v.message) for v in wl)
+assert np.isfinite(np.asarray(outp, np.float32)).all()
+print("FALLBACK_OBSERVABLE_OK")
+""", devices=2)
+    assert "FALLBACK_OBSERVABLE_OK" in out
+
+
 def test_sharded_quant_dot_in_main_process():
     """Main-process multi-device coverage (the CI tier1-multidevice job:
     XLA_FLAGS device_count=2 on the pytest process itself, no subprocess
