@@ -1,0 +1,113 @@
+"""Continuous-batching serving engine under a synthetic arrival stream
+(PR 6) -- the serving-trajectory numbers the ROADMAP asks to regression-
+gate like the kernels.
+
+Drives ``repro.serving.ServeEngine`` (slot KV cache in the serving quant
+dtype, prefill-insert, per-slot decode over donated buffers) with a
+seeded Poisson stream of mixed prompt/generation lengths, and reports:
+
+  * tokens/s (decode-produced tokens over decode wall-clock),
+  * mean slot occupancy,
+  * p50/p99 per-token latency (steady-state: compiles are paid in the
+    engine warm-up; the prefill-priced first token is excluded).
+
+Records: ``ms`` is the p50 per-token latency; ``gbps`` is the per-step
+KV-cache traffic (the whole slot cache is read every decode step --
+decode's binding bandwidth) over that latency. Extra keys (tokens/s,
+occupancy, p99) ride along for the committed BENCH_<tag>.json
+trajectory; ``compare.py`` gates on ``ms``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.configs import get_config
+from repro.core.quant import QuantConfig
+from repro.launch.train import scaled_config
+
+
+def _engine_case(mode: str, smoke: bool, seed: int = 0):
+    import jax
+
+    from repro.launch.mesh import make_local_mesh
+    from repro.launch.steps import make_param_init, param_shardings
+    from repro.serving import ServeEngine, synthetic_stream
+
+    quant = QuantConfig(mode=mode, rotate="hadamard" if mode != "none"
+                        else "none", backend="xla",
+                        kv_quant=mode != "none")
+    cfg = scaled_config(get_config("llama3-8b"),
+                        0.004 if smoke else 0.01).with_quant(quant)
+    if mode != "none":
+        cfg = dataclasses.replace(cfg, weight_quant="int8")
+    slots = 4 if smoke else 8
+    max_len = 48 if smoke else 128
+    prefill_len = 16 if smoke else 48
+    n_req = 6 if smoke else 24
+    mesh = make_local_mesh(1)
+    with mesh:
+        ps = param_shardings(cfg, mesh)
+        params = jax.jit(make_param_init(cfg), out_shardings=ps)(
+            jax.random.PRNGKey(seed))
+    engine = ServeEngine(cfg, params, mesh, num_slots=slots,
+                         max_len=max_len, prefill_len=prefill_len)
+    stream = synthetic_stream(
+        n_req, vocab_size=cfg.vocab_size, prompt_len=(4, prefill_len),
+        max_new_tokens=(4, 8) if smoke else (8, 24),
+        rate=0.75, seed=seed)
+    engine.run(stream)
+    return engine, slots, max_len
+
+
+def run(csv: List[str], smoke: bool = False, records: Optional[List] = None):
+    modes = ("none", "int8") if smoke else ("none", "int8", "fp8_e4m3")
+    for mode in modes:
+        engine, slots, max_len = _engine_case(mode, smoke)
+        s = engine.summary()
+        csv.append(
+            f"serve_loop,mode={mode},slots={slots},max_len={max_len},"
+            f"requests={s['requests']:.0f},tok_s={s['tokens_per_s']:.1f},"
+            f"occupancy={s['occupancy']:.2f},"
+            f"p50_token_ms={s['p50_token_ms']:.2f},"
+            f"p99_token_ms={s['p99_token_ms']:.2f},"
+            f"stalls={s.get('queue_full_stalls', 0):.0f},"
+            f"decode_executables={s['decode_executables']:.0f},"
+            f"quantize_weight_calls={s['quantize_weight_calls']:.0f}")
+        if records is not None:
+            ms = s["p50_token_ms"]
+            records.append({
+                "bench": f"serve_loop_{mode}",
+                "shape": f"slots{slots}x{max_len}",
+                "dtype": mode if mode != "none" else "bfloat16",
+                "backend": "engine",
+                "ms": round(ms, 4),
+                # decode reads the whole slot cache every step
+                "gbps": round(s["kv_cache_bytes"] / (ms * 1e-3) / 1e9, 3),
+                "tokens_per_s": round(s["tokens_per_s"], 2),
+                "occupancy": round(s["occupancy"], 3),
+                "p99_ms": round(s["p99_token_ms"], 4),
+            })
+    return csv
+
+
+def main():
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args()
+    csv: List[str] = []
+    records: List[dict] = []
+    run(csv, smoke=args.smoke, records=records)
+    for line in csv:
+        print(line)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(records, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

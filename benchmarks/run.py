@@ -7,6 +7,9 @@
   bench_quant_dot       -- fused rotate+quantize+GEMM consumer (PR 3)
   bench_serve_prequant  -- pre-quantized QTensor weights vs per-forward
                            weight quantization on the serving path (PR 4)
+  bench_serve_loop      -- continuous-batching engine under a synthetic
+                           arrival stream: tok/s, occupancy, p50/p99
+                           per-token latency (PR 6)
 
 Prints ``name,key=value,...`` CSV lines; ``--only <name>`` runs a subset.
 ``--json PATH`` additionally writes machine-readable records
@@ -41,6 +44,7 @@ def main() -> None:
         bench_hadamard,
         bench_quant_accuracy,
         bench_quant_dot,
+        bench_serve_loop,
         bench_serve_prequant,
     )
 
@@ -51,6 +55,7 @@ def main() -> None:
         "fused_quant": bench_fused_quant.run,
         "quant_dot": bench_quant_dot.run,
         "serve_prequant": bench_serve_prequant.run,
+        "serve_loop": bench_serve_loop.run,
     }
     csv, records = [], []
     for name, fn in suites.items():

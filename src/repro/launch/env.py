@@ -1,0 +1,87 @@
+"""Host-level launch hardening (ROADMAP; SNIPPETS.md 1-2,
+HomebrewNLP-Jax / olmax ``run.sh``).
+
+The related repos wrap their launchers in a shell script that preloads
+tcmalloc and silences the TF/XLA host stack before python starts. We do
+the equivalent in-process so ``python -m repro.launch.serve_loop`` needs
+no wrapper:
+
+  * env flags (``TF_CPP_MIN_LOG_LEVEL=4``,
+    ``TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD``) are set if absent --
+    these are read at backend init, which is lazy, so setting them at
+    the top of ``main()`` is early enough;
+  * ``REPRO_XLA_HOST_DEVICES=N`` (explicit opt-in, mirroring run.sh's
+    ``--xla_force_host_platform_device_count``) is appended to
+    ``XLA_FLAGS`` -- never set implicitly, because the fake-device count
+    locks at first jax init and tests own that knob;
+  * tcmalloc's ``LD_PRELOAD`` only takes effect at process start, so
+    when a known tcmalloc exists and the process was not already
+    preloaded, the CLI entry points re-exec themselves once
+    (``reexec=True``; guarded by a marker env var). Library callers and
+    tests use ``reexec=False``: flags only, never a re-exec.
+
+Opt-out: ``REPRO_NO_ENV_HARDEN=1`` makes the whole thing a no-op.
+"""
+from __future__ import annotations
+
+import os
+import sys
+from typing import Dict, Optional
+
+_TCMALLOC_CANDIDATES = (
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4",
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4",
+    "/usr/lib/libtcmalloc.so.4",
+)
+_MARKER = "REPRO_ENV_HARDENED"
+
+_DEFAULT_FLAGS = {
+    "TF_CPP_MIN_LOG_LEVEL": "4",                    # silence TF host stack
+    "TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD": "60000000000",
+}
+
+
+def find_tcmalloc() -> Optional[str]:
+    for path in _TCMALLOC_CANDIDATES:
+        if os.path.exists(path):
+            return path
+    return None
+
+
+def harden_host_env(*, reexec: bool = False,
+                    environ: Optional[Dict[str, str]] = None) -> Dict[str, str]:
+    """Apply the launch-hardening env. Returns {name: value} of every
+    variable this call actually set (empty when opted out or nothing was
+    missing). ``environ`` defaults to ``os.environ`` (injectable for
+    tests). With ``reexec=True`` (CLI ``__main__`` blocks ONLY -- never
+    from a library/test, it replaces the process image) the process
+    re-execs once with tcmalloc preloaded when available."""
+    env = os.environ if environ is None else environ
+    if env.get("REPRO_NO_ENV_HARDEN") == "1":
+        return {}
+    applied: Dict[str, str] = {}
+    for name, value in _DEFAULT_FLAGS.items():
+        if name not in env:
+            env[name] = value
+            applied[name] = value
+    ndev = env.get("REPRO_XLA_HOST_DEVICES")
+    if ndev:
+        flag = f"--xla_force_host_platform_device_count={int(ndev)}"
+        flags = env.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            env["XLA_FLAGS"] = f"{flags} {flag}".strip()
+            applied["XLA_FLAGS"] = env["XLA_FLAGS"]
+
+    tcmalloc = find_tcmalloc()
+    if tcmalloc and tcmalloc not in env.get("LD_PRELOAD", "") \
+            and _MARKER not in env:
+        preload = " ".join(p for p in (env.get("LD_PRELOAD"), tcmalloc) if p)
+        env["LD_PRELOAD"] = preload
+        env[_MARKER] = "1"
+        applied["LD_PRELOAD"] = preload
+        if reexec and environ is None:
+            # LD_PRELOAD is consumed by the dynamic loader at process
+            # start; apply it by replacing this process once (marker
+            # guards against loops)
+            os.execv(sys.executable, [sys.executable] + sys.argv)
+    return applied

@@ -194,12 +194,16 @@ def jit_train_step(cfg, opt_cfg, shape, mesh, *, rules_overrides=None, donate=Tr
 
 
 def jit_serve_step(cfg, batch_size, cache_seq, mesh, *, rules_overrides=None,
-                   donate=True):
+                   donate=True, per_slot=False):
+    """jit(serve_step). ``per_slot=True`` is the continuous-batching form:
+    cache_pos is a (batch,) int32 vector (one position per request slot,
+    sharded with the slots) instead of a batch-wide scalar."""
     with shd.sharding_rules(mesh, rules_overrides):
         ps = param_shardings(cfg, mesh)
         cs = cache_shardings(cfg, batch_size, cache_seq, mesh)
         tok_s = shd.make_resolver(mesh)(("batch", None), (batch_size, 1))
-    scalar = NamedSharding(mesh, P())
+        pos_s = (shd.make_resolver(mesh)(("batch",), (batch_size,))
+                 if per_slot else NamedSharding(mesh, P()))
     fn = make_serve_step(cfg)
 
     def wrapped(params, caches, tokens, cache_pos):
@@ -208,7 +212,7 @@ def jit_serve_step(cfg, batch_size, cache_seq, mesh, *, rules_overrides=None,
 
     jitted = jax.jit(
         wrapped,
-        in_shardings=(ps, cs, tok_s, scalar),
+        in_shardings=(ps, cs, tok_s, pos_s),
         out_shardings=(tok_s, None, cs),
         donate_argnums=(1,) if donate else (),
     )

@@ -203,7 +203,10 @@ def decode_attention(
     positions: jnp.ndarray,
 ):
     """Single-token decode. x: (B,1,d); cache_k/v: (B,T,KH,hd) rotated+
-    quantized at write time (the FP8 KV-cache path); cache_pos: () int32.
+    quantized at write time (the FP8 KV-cache path); cache_pos: () int32
+    shared by the whole batch (one-shot serving) OR (B,) int32 per-slot
+    positions (continuous batching: every slot sits at its own depth in
+    its own KV rows, so the write and the causal mask are per-row).
 
     Returns (y, new_cache_k, new_cache_v)."""
     B, S, _ = x.shape
@@ -214,14 +217,28 @@ def decode_attention(
     k = apply_rope_angles(k, ang)
     q, k = _rotate_quant_qk(cfg, q, k)
     v = _v_spec(cfg, v.shape[-1])(v)
-    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), cache_pos, axis=1)
-    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), cache_pos, axis=1)
+    per_slot = cache_pos.ndim == 1
+    if per_slot:
+        # per-row scatter: slot b writes its token at its own position
+        write = jax.vmap(lambda c, u, s: jax.lax.dynamic_update_slice_in_dim(
+            c, u, s, axis=0))
+        cache_k = write(cache_k, k.astype(cache_k.dtype), cache_pos)
+        cache_v = write(cache_v, v.astype(cache_v.dtype), cache_pos)
+    else:
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), cache_pos, axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), cache_pos, axis=1)
     T = cache_k.shape[1]
     kpos = jnp.arange(T, dtype=jnp.int32)
-    m = kpos <= cache_pos
-    if cfg.sliding_window:
-        m &= kpos > (cache_pos - cfg.sliding_window)
-    mask = m[None, None, None]                         # (1,1,1,T)
+    if per_slot:
+        m = kpos[None] <= cache_pos[:, None]           # (B,T)
+        if cfg.sliding_window:
+            m &= kpos[None] > (cache_pos[:, None] - cfg.sliding_window)
+        mask = m[:, None, None]                        # (B,1,1,T)
+    else:
+        m = kpos <= cache_pos
+        if cfg.sliding_window:
+            m &= kpos > (cache_pos - cfg.sliding_window)
+        mask = m[None, None, None]                     # (1,1,1,T)
     ctx = _sdpa(cfg, q, cache_k.astype(q.dtype), cache_v.astype(q.dtype), mask)
     y = constrain(ctx @ p["wo"], "batch", "seq", None)
     return y, cache_k, cache_v

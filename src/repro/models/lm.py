@@ -412,13 +412,19 @@ def pad_kv_caches(cfg, caches, max_len: int):
 
 def lm_decode_step(cfg: ModelConfig, params, caches, tokens, cache_pos):
     """One decode step. tokens: (B,1) int32; cache_pos: () int32 (number of
-    tokens already in the cache). Returns (logits, new_caches)."""
+    tokens already in the cache, shared by the whole batch) OR (B,) int32
+    per-slot positions -- the continuous-batching form, where every batch
+    row is an independent request slot at its own depth (serving.engine).
+    Returns (logits, new_caches)."""
     emb = dequant_tree(params["emb"], jnp.dtype(cfg.dtype))
     x = jnp.take(emb, tokens, axis=0)
     B = x.shape[0]
     if cfg.is_encdec:
         x = x + sinusoidal_positions(1, cfg.d_model).astype(x.dtype)[None]
-    pos = jnp.broadcast_to(cache_pos[None, None], (B, 1)).astype(jnp.int32)
+    if cache_pos.ndim == 1:
+        pos = cache_pos[:, None].astype(jnp.int32)     # (B,1) per-slot
+    else:
+        pos = jnp.broadcast_to(cache_pos[None, None], (B, 1)).astype(jnp.int32)
     if cfg.mrope:
         positions = jnp.broadcast_to(pos[None], (3, B, 1))
     else:

@@ -1,0 +1,11 @@
+"""Continuous-batching serving engine (DESIGN.md section 10).
+
+Request-level serving over pre-quantized QTensor weights: a slot-based
+KV cache allocated once in the serving quant dtype, a host-side
+scheduler that admits and retires requests mid-decode, and an engine
+loop driving three once-compiled jitted steps (prefill / prefill-insert
+/ per-slot decode)."""
+from repro.serving.cache import alloc_kv_caches, cache_bytes, make_insert_fn  # noqa: F401
+from repro.serving.engine import ServeEngine  # noqa: F401
+from repro.serving.scheduler import Completion, Request, Scheduler  # noqa: F401
+from repro.serving.stream import synthetic_stream  # noqa: F401

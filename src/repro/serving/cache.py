@@ -1,0 +1,63 @@
+"""Slot-based KV cache for the continuous-batching engine.
+
+The cache is allocated ONCE at engine start -- (layers, slots, max_len,
+KH, hd) per attention site, in the serving KV dtype (``cfg.quant.kv_quant``
+grid: real fp8 storage when the config quantizes the cache) -- and then
+only ever mutated through donated jit steps:
+
+  * ``make_insert_fn``: scatter a freshly prefilled request's KV rows
+    into its slot (prefill-insert). The whole prefill-bucket block
+    [0, prefill_len) is written; rows beyond the request's true length
+    hold prefill padding garbage, which is safe by construction: the
+    per-slot causal mask never attends a row >= the slot's position, and
+    the decode step overwrites row ``pos`` before attending it.
+  * the per-slot decode step (``launch.steps.jit_serve_step(per_slot=
+    True)``): each slot writes its token's K/V at its own position.
+
+Both steps donate the cache operand, so steady-state serving never
+reallocates cache storage -- slot retirement and reuse are pure host-side
+bookkeeping (``serving.scheduler``) plus these in-place updates.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import shapes as shp
+from repro.models.config import ModelConfig
+
+
+def alloc_kv_caches(cfg: ModelConfig, slots: int, max_len: int):
+    """Zero-initialized cache tree matching ``lm_decode_step``'s layout:
+    per attention site (repeats, slots, max_len, KH, hd) in the serving
+    KV dtype. Called exactly once per engine."""
+    specs = shp.cache_specs(cfg, slots, max_len)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
+
+
+def cache_bytes(cfg: ModelConfig, slots: int, max_len: int) -> int:
+    """Total cache allocation in bytes (observability / bench records)."""
+    specs = shp.cache_specs(cfg, slots, max_len)
+    return sum(int(s.size) * jnp.dtype(s.dtype).itemsize
+               for s in jax.tree.leaves(specs))
+
+
+def make_insert_fn(cfg: ModelConfig):
+    """Prefill-insert: write a (layers, 1, P, ...) prefilled KV tree into
+    slot ``slot`` of the (layers, slots, T, ...) engine cache.
+
+    Pure function of (caches, kv, slot) with matching tree structure --
+    the engine jits it with ``donate_argnums=(0,)`` so admission does not
+    reallocate the cache either."""
+
+    def insert(caches, kv, slot):
+        def one(c, p):
+            p = p.astype(c.dtype)
+            # start indices: layer 0, slot, then 0 on every trailing dim
+            start = (jnp.zeros((), jnp.int32), slot) + tuple(
+                jnp.zeros((), jnp.int32) for _ in range(c.ndim - 2))
+            return jax.lax.dynamic_update_slice(c, p, start)
+
+        return jax.tree.map(one, caches, kv)
+
+    return insert

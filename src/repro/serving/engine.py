@@ -1,0 +1,279 @@
+"""Continuous-batching serving engine over pre-quantized QTensor weights.
+
+The one-shot launcher (``launch/serve.py``) prefills a fixed batch, then
+decodes every row in lockstep behind a single scalar ``pos`` until the
+whole batch exits together. A production serving loop admits and retires
+requests *mid-decode*. This engine does that with three jitted device
+functions, each compiled exactly once per engine:
+
+  prefill   (params, {tokens:(1,P)}, length) -> (first token, KV rows)
+            -- prompts are right-padded to the fixed prefill bucket P, so
+            every admission hits the same compiled executable; under the
+            causal mask the padding rows never influence positions
+            < length, and the logits are gathered at length-1.
+  insert    (caches, kv, slot) -> caches    [donated caches]
+            -- scatter the newcomer's KV block into its slot.
+  decode    (params, caches, tokens, positions) -> tokens [donated caches]
+            -- ``launch.steps.jit_serve_step(per_slot=True)``: one step
+            over ALL slots with a (slots,) position vector; every slot
+            writes and attends at its own depth.
+
+The KV cache is allocated ONCE (``serving.cache``) in the serving quant
+dtype; admissions, retirements, and slot reuse are host-side scheduler
+bookkeeping (``serving.scheduler``) plus donated in-place updates -- the
+steady-state decode step neither reallocates nor retraces (the decode
+executable count stays 1 across the whole run; see
+``decode_cache_size``). With ``cfg.weight_quant == 'int8'`` the weights
+are pre-quantized QTensors, so the serving forward performs zero
+``quantize_weight`` calls after engine construction (tracked via
+``wquant.QUANTIZE_WEIGHT_CALLS``).
+
+Timing discipline: ``warmup()`` pays all three compiles on dummy inputs
+before any request is admitted, so reported per-token latencies are
+steady-state (the same fix applied to ``serve.py``'s timed loop).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import wquant
+from repro.distributed import sharding as shd
+from repro.kernels.registry import TRACE_COUNTS
+from repro.launch.steps import jit_serve_step
+from repro.models.config import ModelConfig
+from repro.models.lm import lm_forward
+from repro.serving.cache import alloc_kv_caches, cache_bytes, make_insert_fn
+from repro.serving.scheduler import Completion, Request, Scheduler
+
+_SUPPORTED_KINDS = ("attn", "moe")
+
+
+def _validate_config(cfg: ModelConfig) -> None:
+    """Continuous batching needs position-addressable per-token caches;
+    right-padded bucket prefill is only exact for causal attention (a
+    padded row can never influence an earlier position). Scan-state
+    architectures (mamba/rwkv) carry their whole prefix in one state
+    tensor, so a padded prefill would fold padding into the state."""
+    kinds = {k for pattern, _ in cfg.groups for k in pattern}
+    bad = kinds - set(_SUPPORTED_KINDS)
+    if bad or cfg.is_encdec or cfg.family == "vlm":
+        raise ValueError(
+            f"serving engine supports causal attention stacks only "
+            f"(kinds {_SUPPORTED_KINDS}); config {cfg.name!r} has "
+            f"kinds={sorted(kinds)} family={cfg.family!r} "
+            f"encdec={cfg.is_encdec}")
+
+
+def _make_prefill_fn(cfg: ModelConfig):
+    def prefill(params, batch, length):
+        logits, _, caches = lm_forward(cfg, params, batch, want_cache=True)
+        # right-padded bucket: the request's last real token sits at
+        # length-1; everything past it is padding the causal mask keeps
+        # out of positions < length
+        last = jax.lax.dynamic_slice_in_dim(logits, length - 1, 1, axis=1)
+        tok = jnp.argmax(last[:, -1], axis=-1).astype(jnp.int32)
+        return tok, caches
+
+    return prefill
+
+
+class ServeEngine:
+    """Drives jitted prefill/insert/decode steps over a request stream.
+
+    params must already be placed with ``launch.steps.param_shardings``
+    (the launchers' init path); with ``cfg.weight_quant == 'int8'`` they
+    are the pre-quantized QTensor tree."""
+
+    def __init__(self, cfg: ModelConfig, params, mesh, *,
+                 num_slots: int, max_len: int, prefill_len: int,
+                 eos_id: Optional[int] = None, rules_overrides=None):
+        _validate_config(cfg)
+        self.cfg = cfg
+        self.params = params
+        self.mesh = mesh
+        self.eos_id = eos_id
+        self.prefill_len = prefill_len
+        self.max_len = max_len
+        self.sched = Scheduler(num_slots, max_len, prefill_len)
+
+        def in_rules(fn):
+            def wrapped(*a):
+                with shd.sharding_rules(mesh, rules_overrides):
+                    return fn(*a)
+            return wrapped
+
+        self._prefill = jax.jit(in_rules(_make_prefill_fn(cfg)))
+        self._insert = jax.jit(in_rules(make_insert_fn(cfg)),
+                               donate_argnums=(0,))
+        self._decode, (_, cs, _) = jit_serve_step(
+            cfg, num_slots, max_len, mesh, rules_overrides=rules_overrides,
+            donate=True, per_slot=True)
+
+        # the ONE cache allocation of the engine's lifetime
+        self.caches = jax.device_put(
+            alloc_kv_caches(cfg, num_slots, max_len), cs)
+        self.tokens_h = np.zeros((num_slots, 1), np.int32)
+        self.positions_h = np.zeros((num_slots,), np.int32)
+
+        self.step = 0
+        self.completions: List[Completion] = []
+        self._step_latencies_ms: List[float] = []
+        self._occupancy: List[float] = []
+        self._decode_s = 0.0
+        self._compile_s: Optional[float] = None
+        self._idle_steps = 0
+        self._qw_calls_baseline = wquant.QUANTIZE_WEIGHT_CALLS
+
+    # ---------------------------------------------------------- warm-up
+    def warmup(self) -> float:
+        """Compile prefill/insert/decode on dummy inputs before serving,
+        so no request's latency includes a jit compile. Writes garbage
+        into cache rows that are by-construction never attended before
+        being overwritten (prefill-insert rewrites [0, P) on admission;
+        decode rewrites row ``pos`` before attending it)."""
+        if self._compile_s is not None:
+            return self._compile_s
+        t0 = time.perf_counter()
+        batch = {"tokens": jnp.zeros((1, self.prefill_len), jnp.int32)}
+        tok, kv = self._prefill(self.params, batch,
+                                jnp.asarray(1, jnp.int32))
+        self.caches = self._insert(self.caches, kv,
+                                   jnp.asarray(0, jnp.int32))
+        new_tok, _, self.caches = self._decode(
+            self.params, self.caches, jnp.asarray(self.tokens_h),
+            jnp.asarray(self.positions_h))
+        jax.block_until_ready(new_tok)
+        self._compile_s = time.perf_counter() - t0
+        # everything past this point is steady-state serving
+        self._qw_calls_baseline = wquant.QUANTIZE_WEIGHT_CALLS
+        return self._compile_s
+
+    # --------------------------------------------------------- lifecycle
+    def submit(self, req: Request) -> None:
+        self.sched.submit(req)
+
+    def _admit(self, slot: int, req: Request) -> None:
+        padded = np.zeros((1, self.prefill_len), np.int32)
+        padded[0, :req.prompt_len] = req.tokens
+        t0 = time.perf_counter()
+        tok, kv = self._prefill(self.params, {"tokens": jnp.asarray(padded)},
+                                jnp.asarray(req.prompt_len, jnp.int32))
+        self.caches = self._insert(self.caches, kv,
+                                   jnp.asarray(slot, jnp.int32))
+        tok_h = int(jax.block_until_ready(tok)[0])
+        dt_ms = (time.perf_counter() - t0) * 1e3
+        TRACE_COUNTS[("serving", "prefill_insert")] += 1
+        self.sched.counters["prefill_inserts"] += 1
+
+        st = self.sched.active[slot]
+        st.generated.append(tok_h)
+        st.latencies_ms.append(dt_ms)
+        self.tokens_h[slot, 0] = tok_h
+        self.positions_h[slot] = st.pos
+        self._maybe_retire(slot, tok_h)
+
+    def _maybe_retire(self, slot: int, last_tok: int) -> bool:
+        st = self.sched.active[slot]
+        reason = None
+        if self.eos_id is not None and last_tok == self.eos_id:
+            reason = "eos"
+        elif len(st.generated) >= st.max_new_tokens:
+            reason = "length"
+        elif st.pos >= self.max_len:
+            reason = "cache_full"
+        if reason is None:
+            return False
+        self.completions.append(
+            self.sched.retire(slot, reason, float(self.step)))
+        return True
+
+    # -------------------------------------------------------------- run
+    def run(self, requests: Sequence[Request]) -> List[Completion]:
+        """Serve a whole arrival stream to completion; returns the
+        completion records (also accumulated on ``self.completions``)."""
+        self.warmup()
+        for req in requests:
+            self.submit(req)
+        while self.sched.has_work():
+            now = float(self.step)
+            # admissions: prefill-insert every arrived request a free
+            # slot can take, straight into the running decode batch
+            while True:
+                adm = self.sched.next_admission(now)
+                if adm is None:
+                    break
+                self._admit(*adm)
+            if not self.sched.active:
+                nxt = self.sched.next_arrival()
+                if nxt is None:
+                    break
+                # idle: jump the step clock to the next arrival
+                self.step = max(self.step + 1, int(np.ceil(nxt)))
+                self._idle_steps += 1
+                continue
+            self._decode_step()
+        return self.completions
+
+    def _decode_step(self) -> None:
+        t0 = time.perf_counter()
+        new_tok, _, self.caches = self._decode(
+            self.params, self.caches, jnp.asarray(self.tokens_h),
+            jnp.asarray(self.positions_h))
+        new_tok_h = np.asarray(new_tok)           # blocks until ready
+        dt_ms = (time.perf_counter() - t0) * 1e3
+        self._decode_s += dt_ms * 1e-3
+        self._step_latencies_ms.append(dt_ms)
+        self._occupancy.append(self.sched.occupancy)
+        self.step += 1
+        for slot in sorted(self.sched.active):
+            st = self.sched.active[slot]
+            tok = int(new_tok_h[slot, 0])
+            st.generated.append(tok)
+            st.latencies_ms.append(dt_ms)
+            st.pos += 1
+            self.tokens_h[slot, 0] = tok
+            self.positions_h[slot] = st.pos
+            self._maybe_retire(slot, tok)
+
+    # ------------------------------------------------------ observability
+    def decode_cache_size(self) -> int:
+        """Number of compiled decode executables -- stays 1 across
+        admissions/retirements (fixed shapes, host-side scheduling)."""
+        return self._decode._cache_size()
+
+    def quantize_weight_calls_during_serve(self) -> int:
+        """quantize_weight invocations since warmup -- 0 on the prequant
+        path (QTensor weights are consumed directly)."""
+        return wquant.QUANTIZE_WEIGHT_CALLS - self._qw_calls_baseline
+
+    def summary(self) -> Dict[str, float]:
+        # per-token latencies: decode-produced tokens only (index 0 is the
+        # prefill-produced first token, whose cost is the admission)
+        lat = np.asarray([ms for c in self.completions
+                          for ms in c.latencies_ms[1:]] or [0.0])
+        gen = sum(len(c.tokens) for c in self.completions)
+        gen_decode = sum(max(len(c.tokens) - 1, 0) for c in self.completions)
+        return {
+            "requests": len(self.completions),
+            "generated_tokens": gen,
+            "decode_steps": len(self._step_latencies_ms),
+            "idle_steps": self._idle_steps,
+            "tokens_per_s": (gen_decode / self._decode_s
+                            if self._decode_s else 0.0),
+            "occupancy": float(np.mean(self._occupancy)) if self._occupancy
+            else 0.0,
+            "p50_token_ms": float(np.percentile(lat, 50)),
+            "p99_token_ms": float(np.percentile(lat, 99)),
+            "compile_s": self._compile_s or 0.0,
+            "decode_s": self._decode_s,
+            "decode_executables": self.decode_cache_size(),
+            "quantize_weight_calls": self.quantize_weight_calls_during_serve(),
+            "kv_cache_bytes": cache_bytes(self.cfg, self.sched.num_slots,
+                                          self.max_len),
+            **{k: int(v) for k, v in self.sched.counters.items()},
+        }

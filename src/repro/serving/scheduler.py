@@ -1,0 +1,145 @@
+"""Request-level scheduler for the continuous-batching engine.
+
+Pure host-side bookkeeping -- no jax types -- so it is unit-testable
+without a device and never causes a retrace: the device only ever sees
+fixed-shape (slots,) position vectors and (slots, 1) token arrays.
+
+Lifecycle of a request (DESIGN.md section 10):
+
+    submit -> [arrival queue] -> admit (free slot + arrived)
+           -> prefill-insert (engine) -> decode steps -> retire
+           (EOS / max-new-tokens / cache-full) -> slot back on free list
+
+The free list gives retired slots back in LIFO order (immediate reuse --
+the hot slot's cache rows are the ones most recently touched).
+Admission is FCFS from the arrival queue; a step where the queue head
+has arrived but no slot is free counts one ``queue_full_stall``.
+
+Observability: every transition bumps
+``kernels.registry.TRACE_COUNTS[("serving", <event>)]`` (admit / retire /
+prefill_insert / queue_full_stall) plus per-scheduler counters, so tests
+and the engine's stats report read one shared ledger.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.kernels.registry import TRACE_COUNTS
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request. ``arrival_time`` is in decode-step units
+    (the synthetic streams are step-clocked, not wall-clocked)."""
+
+    rid: int
+    tokens: np.ndarray              # (prompt_len,) int32 prompt ids
+    max_new_tokens: int
+    arrival_time: float = 0.0
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.tokens.shape[0])
+
+
+@dataclasses.dataclass
+class SlotState:
+    """Host mirror of one active slot."""
+
+    rid: int
+    prompt_len: int
+    pos: int                        # rows already in the slot's KV cache
+    max_new_tokens: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    admitted_step: int = 0
+    latencies_ms: List[float] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass(frozen=True)
+class Completion:
+    rid: int
+    prompt_len: int
+    tokens: Tuple[int, ...]         # generated ids (first one from prefill)
+    finish_reason: str              # 'eos' | 'length' | 'cache_full'
+    admitted_step: int
+    retired_step: int
+    latencies_ms: Tuple[float, ...]
+
+
+class Scheduler:
+    """Slot allocator + arrival queue. The engine owns the device arrays;
+    this class owns which request lives in which slot."""
+
+    def __init__(self, num_slots: int, max_len: int, prefill_len: int):
+        if prefill_len > max_len:
+            raise ValueError(f"prefill_len {prefill_len} > max_len {max_len}")
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.prefill_len = prefill_len
+        # LIFO free list, seeded so first admissions get slots 0,1,2,...
+        self.free: List[int] = list(range(num_slots))[::-1]
+        self.queue: Deque[Request] = collections.deque()
+        self.active: Dict[int, SlotState] = {}
+        self.counters: Dict[str, int] = collections.defaultdict(int)
+
+    # ------------------------------------------------------------ intake
+    def submit(self, req: Request) -> None:
+        if req.prompt_len < 1 or req.prompt_len > self.prefill_len:
+            raise ValueError(
+                f"request {req.rid}: prompt_len {req.prompt_len} outside "
+                f"[1, prefill_len={self.prefill_len}]")
+        if req.max_new_tokens < 1 or \
+                req.prompt_len + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt_len + max_new_tokens "
+                f"{req.prompt_len + req.max_new_tokens} > max_len "
+                f"{self.max_len} (or max_new_tokens < 1)")
+        self.queue.append(req)
+        self.counters["submitted"] += 1
+
+    # --------------------------------------------------------- admission
+    def next_admission(self, now: float) -> Optional[Tuple[int, Request]]:
+        """Pop (slot, request) if the FCFS queue head has arrived and a
+        slot is free; None otherwise. Counts a queue_full_stall when work
+        has arrived but every slot is occupied."""
+        if not self.queue or self.queue[0].arrival_time > now:
+            return None
+        if not self.free:
+            self.counters["queue_full_stalls"] += 1
+            TRACE_COUNTS[("serving", "queue_full_stall")] += 1
+            return None
+        req = self.queue.popleft()
+        slot = self.free.pop()
+        self.active[slot] = SlotState(
+            rid=req.rid, prompt_len=req.prompt_len, pos=req.prompt_len,
+            max_new_tokens=req.max_new_tokens, admitted_step=int(now))
+        self.counters["admitted"] += 1
+        TRACE_COUNTS[("serving", "admit")] += 1
+        return slot, req
+
+    # -------------------------------------------------------- retirement
+    def retire(self, slot: int, finish_reason: str, now: float) -> Completion:
+        st = self.active.pop(slot)
+        self.free.append(slot)          # immediate LIFO reuse
+        self.counters["retired"] += 1
+        TRACE_COUNTS[("serving", "retire")] += 1
+        return Completion(
+            rid=st.rid, prompt_len=st.prompt_len,
+            tokens=tuple(st.generated), finish_reason=finish_reason,
+            admitted_step=st.admitted_step, retired_step=int(now),
+            latencies_ms=tuple(st.latencies_ms))
+
+    # ------------------------------------------------------------- state
+    def has_work(self) -> bool:
+        return bool(self.queue) or bool(self.active)
+
+    def next_arrival(self) -> Optional[float]:
+        return self.queue[0].arrival_time if self.queue else None
+
+    @property
+    def occupancy(self) -> float:
+        return len(self.active) / max(self.num_slots, 1)
