@@ -11,6 +11,7 @@ wall-clock (the TPU-relevant metric; both paths are memory-bound).
 """
 from __future__ import annotations
 
+import os
 import time
 from typing import List, Optional
 
@@ -20,7 +21,8 @@ import numpy as np
 
 from repro.core.api import QuantEpilogue, hadamard, plan_for, quant_dot
 from repro.core.wquant import quantize_weight
-from repro.kernels.quant_dot import epilogue_dot, pallas_quant_dot
+from repro.kernels.quant_dot import (STREAM_INTERPRET_ENV, epilogue_dot,
+                                     pallas_quant_dot, quant_dot_blocks)
 from repro.kernels.registry import QSPECS
 
 
@@ -76,50 +78,88 @@ def _run_d_sweep(csv: List[str], smoke: bool, records: Optional[List]):
     interpret ms of the two schedules track each other within noise. The
     ms records are still the trajectory gate (regressions in either
     schedule fail benchmarks/compare.py); the amortization claim rides on
-    the transform-work columns."""
+    the transform-work columns.
+
+    PR 7 adds the ``streamed`` A/B column at the same pinned block_n: the
+    rotate-once structure with the implicit weight fetch replaced by the
+    two-slot DMA ring (prefetch tile j+1 during the tile-j contraction).
+    On the interpreter the DMA simulation is synchronous, so the streamed
+    ms carries ring bookkeeping overhead with no overlap win -- the
+    overlap claim is the structural jaxpr assertion in tests; the ms
+    records gate the trajectory. The CSV also logs the streamed
+    BlockDecision (schedule + charged VMEM including the ring) at the
+    sweep's pinned tile."""
     rng = np.random.default_rng(1)
     n, rows, bn, mode = 1024, 64, 256, "int8"
     ds = (256, 512) if smoke else (256, 512, 1024, 2048)
     x = jnp.asarray(rng.standard_normal((rows, n)), jnp.float32)
     plan = plan_for(n, backend="pallas", epilogue=QuantEpilogue(mode))
-    for d in ds:
-        w = jnp.asarray(rng.standard_normal((n, d)) * 0.05, jnp.float32)
-        wq, sw = quantize_weight(w, mode)
-        once = jax.jit(lambda a, q, s: pallas_quant_dot(
-            a, q, s, plan, True, "rotate_once", bn))
-        revisit = jax.jit(lambda a, q, s: pallas_quant_dot(
-            a, q, s, plan, True, "revisit", bn))
-        t_once = _time_min(once, x, wq, sw)
-        t_revisit = _time_min(revisit, x, wq, sw)
-        assert (np.asarray(once(x, wq, sw))
-                == np.asarray(revisit(x, wq, sw))).all()
-        tiles = -(-d // bn)
-        csv.append(
-            f"quant_dot_dsweep,n={n},d={d},mode={mode},block_n={bn},"
-            f"tiles_per_row_block={tiles},"
-            f"transforms_per_row_block_rotate_once=1,"
-            f"transforms_per_row_block_revisit={tiles},"
-            f"rotate_once_ms={t_once:.2f},revisit_ms={t_revisit:.2f},"
-            f"speedup={t_revisit / t_once:.2f}x")
-        if records is not None:
-            shape = f"{rows}x{n}x{d}"
-            # bytes of the shape actually timed (same convention as the
-            # fused-vs-unfused records below): activation in + int8
-            # weight + f32 out-channel scales + f32 output
-            byt = rows * n * 4 + n * d * 1 + d * 4 + rows * d * 4
-            for backend, ms, tr in (("pallas_rotate_once", t_once, 1),
-                                    ("pallas_revisit", t_revisit, tiles)):
-                records.append({
-                    "bench": f"quant_dot_dsweep_{mode}", "shape": shape,
-                    "dtype": "float32", "backend": backend,
-                    "ms": round(ms, 4),
-                    "gbps": round(byt / (ms * 1e-3) / 1e9, 3),
-                    # extra trajectory field (compare.py matches on the
-                    # 4-key identity and ignores it): the per-row-block
-                    # transform count -- flat at 1 for rotate-once,
-                    # linear in d/block_n for the PR-3 schedule
-                    "transforms_per_row_block": tr,
-                })
+    # run the real streamed kernel body on the interpreter's synchronous
+    # DMA simulation rather than the rotate_once fallback
+    prev = os.environ.get(STREAM_INTERPRET_ENV)
+    os.environ[STREAM_INTERPRET_ENV] = "1"
+    try:
+        for d in ds:
+            w = jnp.asarray(rng.standard_normal((n, d)) * 0.05, jnp.float32)
+            wq, sw = quantize_weight(w, mode)
+            once = jax.jit(lambda a, q, s: pallas_quant_dot(
+                a, q, s, plan, True, "rotate_once", bn))
+            revisit = jax.jit(lambda a, q, s: pallas_quant_dot(
+                a, q, s, plan, True, "revisit", bn))
+            streamed = jax.jit(lambda a, q, s: pallas_quant_dot(
+                a, q, s, plan, True, "streamed", bn))
+            t_once = _time_min(once, x, wq, sw)
+            t_revisit = _time_min(revisit, x, wq, sw)
+            t_streamed = _time_min(streamed, x, wq, sw)
+            ref = np.asarray(once(x, wq, sw))
+            assert (ref == np.asarray(revisit(x, wq, sw))).all()
+            assert (ref == np.asarray(streamed(x, wq, sw))).all()
+            tiles = -(-d // bn)
+            blocks = quant_dot_blocks(n, d, rows, jnp.float32, jnp.float32,
+                                      mode, block_n=bn, schedule="streamed")
+            csv.append(
+                f"quant_dot_dsweep,n={n},d={d},mode={mode},block_n={bn},"
+                f"tiles_per_row_block={tiles},"
+                f"transforms_per_row_block_rotate_once=1,"
+                f"transforms_per_row_block_revisit={tiles},"
+                f"rotate_once_ms={t_once:.2f},revisit_ms={t_revisit:.2f},"
+                f"streamed_ms={t_streamed:.2f},"
+                f"streamed_schedule={blocks.schedule},"
+                f"streamed_vmem_bytes={blocks.vmem_bytes},"
+                f"speedup={t_revisit / t_once:.2f}x")
+            if records is not None:
+                shape = f"{rows}x{n}x{d}"
+                # bytes of the shape actually timed (same convention as
+                # the fused-vs-unfused records below): activation in +
+                # int8 weight + f32 out-channel scales + f32 output
+                byt = rows * n * 4 + n * d * 1 + d * 4 + rows * d * 4
+                for backend, ms, tr in (
+                        ("pallas_rotate_once", t_once, 1),
+                        ("pallas_revisit", t_revisit, tiles),
+                        ("pallas_streamed", t_streamed, 1)):
+                    rec = {
+                        "bench": f"quant_dot_dsweep_{mode}", "shape": shape,
+                        "dtype": "float32", "backend": backend,
+                        "ms": round(ms, 4),
+                        "gbps": round(byt / (ms * 1e-3) / 1e9, 3),
+                        # extra trajectory field (compare.py matches on
+                        # the 4-key identity and ignores it): the
+                        # per-row-block transform count -- flat at 1 for
+                        # rotate-once/streamed, linear in d/block_n for
+                        # the PR-3 schedule
+                        "transforms_per_row_block": tr,
+                    }
+                    if backend == "pallas_streamed":
+                        # the ring's VMEM charge at the pinned tile --
+                        # the block planner's streamed accounting
+                        rec["schedule"] = blocks.schedule
+                        rec["vmem_bytes"] = blocks.vmem_bytes
+                    records.append(rec)
+    finally:
+        if prev is None:
+            os.environ.pop(STREAM_INTERPRET_ENV, None)
+        else:
+            os.environ[STREAM_INTERPRET_ENV] = prev
 
 
 def run(csv: List[str], smoke: bool = False, records: Optional[List] = None):

@@ -505,7 +505,8 @@ def _row_shard_axes(mesh, plan: HadamardPlan, m: int) -> Tuple[str, ...]:
     return tuple(keep)
 
 
-def _sharded_quant_dot(x, wq, sw, plan: HadamardPlan, interpret: bool):
+def _sharded_quant_dot(x, wq, sw, plan: HadamardPlan, interpret: bool,
+                       schedule=None):
     """quant_dot over a mesh via ``shard_map``, fused and data-parallel:
 
       * the activation is ROW-SHARDED over the mesh data axes (the rules
@@ -554,9 +555,12 @@ def _sharded_quant_dot(x, wq, sw, plan: HadamardPlan, interpret: bool):
         backend=local_plan.backend)
     if fused:
         def local(xl, wl, sl):
-            # the rotate-once fused kernel, shard-local: xl is this
-            # shard's rows, wl/sl its weight columns + scales
-            return be.quant_dot(xl, wl, sl, local_plan, interpret)
+            # the fused kernel, shard-local: xl is this shard's rows,
+            # wl/sl its weight columns + scales; the grid schedule
+            # (rotate_once / revisit / streamed DMA ring) applies
+            # per shard unchanged
+            return be.quant_dot(xl, wl, sl, local_plan, interpret,
+                                schedule)
     else:
         _sharded_fallback(
             "unfused_local",
@@ -582,7 +586,8 @@ def _sharded_quant_dot(x, wq, sw, plan: HadamardPlan, interpret: bool):
     return out.reshape(*lead, d)
 
 
-def _dispatch_quant_dot(x, wq, sw, plan: HadamardPlan, interpret: bool):
+def _dispatch_quant_dot(x, wq, sw, plan: HadamardPlan, interpret: bool,
+                        schedule=None):
     """rotate(x) -> per-token quantize -> contract against the offline-
     quantized weight (int8 w/ int32 accumulation, fp8 w/ f32), applying
     ``scale_x * scale_w`` in the epilogue. Mesh plans dispatch through
@@ -590,9 +595,15 @@ def _dispatch_quant_dot(x, wq, sw, plan: HadamardPlan, interpret: bool):
     out-channel shards on its mesh axes, the fused rotate-once kernel
     shard-local; fused single-kernel when the plan supports it; otherwise
     the unfused oracle semantics (grouped transforms, per-tensor scales,
-    backends without the kernel -- the pjit-shardable fallback)."""
+    backends without the kernel -- the pjit-shardable fallback).
+
+    ``schedule`` picks the fused kernel's grid schedule (None defers to
+    ``REPRO_QUANT_DOT_SCHEDULE``, then ``rotate_once``; ``"streamed"``
+    double-buffers the weight DMA) and rides through the sharded
+    dispatch to the shard-local kernel; the unfused oracle has no grid,
+    so there it only validates."""
     if plan.mesh_axes and wq.ndim == 2 and plan.epilogue.per_token:
-        out = _sharded_quant_dot(x, wq, sw, plan, interpret)
+        out = _sharded_quant_dot(x, wq, sw, plan, interpret, schedule)
         if out is not None:
             return out
         _sharded_fallback(
@@ -609,7 +620,8 @@ def _dispatch_quant_dot(x, wq, sw, plan: HadamardPlan, interpret: bool):
             f"per_token={plan.epilogue.per_token}); quant_dot runs the "
             "replicated single-device path")
     if _qd_fusable(plan):
-        return get_backend(plan.backend).quant_dot(x, wq, sw, plan, interpret)
+        return get_backend(plan.backend).quant_dot(x, wq, sw, plan,
+                                                   interpret, schedule)
     from repro.kernels.quant_dot import epilogue_dot
 
     y = _dispatch_transform(x, _strip(plan), interpret)
@@ -629,19 +641,20 @@ def _zero_cotangent(a):
     return jnp.zeros(a.shape, a.dtype)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
-def _quant_dot_qw(x, wq, sw, plan: HadamardPlan, interpret: bool):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _quant_dot_qw(x, wq, sw, plan: HadamardPlan, interpret: bool,
+                  schedule=None):
     """Serving form: weights pre-quantized offline. Differentiable in x
     only (STE through the activation quantization); the quantized weight
     and its scales are statistics with zero pullback."""
-    return _dispatch_quant_dot(x, wq, sw, plan, interpret)
+    return _dispatch_quant_dot(x, wq, sw, plan, interpret, schedule)
 
 
-def _quant_dot_qw_fwd(x, wq, sw, plan, interpret):
-    return _dispatch_quant_dot(x, wq, sw, plan, interpret), (wq, sw)
+def _quant_dot_qw_fwd(x, wq, sw, plan, interpret, schedule):
+    return _dispatch_quant_dot(x, wq, sw, plan, interpret, schedule), (wq, sw)
 
 
-def _quant_dot_qw_bwd(plan, interpret, res, g):
+def _quant_dot_qw_bwd(plan, interpret, schedule, res, g):
     # STE: out ~= had(x) @ W with W = dequant(wq, sw), so the x-pullback is
     # the (self-adjoint) rotation of g @ W^T.
     wq, sw = res
@@ -656,27 +669,28 @@ def _quant_dot_qw_bwd(plan, interpret, res, g):
 _quant_dot_qw.defvjp(_quant_dot_qw_fwd, _quant_dot_qw_bwd)
 
 
-def _quant_dot_w_impl(x, w, plan: HadamardPlan, interpret: bool):
+def _quant_dot_w_impl(x, w, plan: HadamardPlan, interpret: bool,
+                      schedule=None):
     from repro.core.wquant import quantize_weight
 
     qt = quantize_weight(w, plan.epilogue.mode)
-    return _dispatch_quant_dot(x, qt.q, qt.scale, plan, interpret)
+    return _dispatch_quant_dot(x, qt.q, qt.scale, plan, interpret, schedule)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
-def _quant_dot_w(x, w, plan: HadamardPlan, interpret: bool):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _quant_dot_w(x, w, plan: HadamardPlan, interpret: bool, schedule=None):
     """Training form: full-precision weight, quantized per out-channel on
     the fly. STE through BOTH quantizations: out ~= had(x) @ w in the
     backward pass, so both gradients flow (w's raw fake-quant grad would
     be zero a.e. -- see the module docstring)."""
-    return _quant_dot_w_impl(x, w, plan, interpret)
+    return _quant_dot_w_impl(x, w, plan, interpret, schedule)
 
 
-def _quant_dot_w_fwd(x, w, plan, interpret):
-    return _quant_dot_w_impl(x, w, plan, interpret), (x, w)
+def _quant_dot_w_fwd(x, w, plan, interpret, schedule):
+    return _quant_dot_w_impl(x, w, plan, interpret, schedule), (x, w)
 
 
-def _quant_dot_w_bwd(plan, interpret, res, g):
+def _quant_dot_w_bwd(plan, interpret, schedule, res, g):
     x, w = res
     gf = g.astype(jnp.float32)
     gy = jnp.matmul(gf, w.astype(jnp.float32).T,
@@ -705,6 +719,7 @@ def quant_dot(
     compute_dtype: Any = _UNSET,
     weight_axes: Optional[Tuple] = _UNSET,
     interpret: Optional[bool] = None,
+    schedule: Optional[str] = None,
 ) -> jnp.ndarray:
     """``quantize(hadamard(x)) @ quantize(w)`` as ONE fused consumer path.
 
@@ -733,6 +748,15 @@ def quant_dot(
     builds one from ``mode`` (default ``"int8"``). Grouped (non-power-of-
     2) sizes and per-tensor scales fall back to the unfused oracle
     semantics -- same math, separate XLA ops, pjit-shardable.
+
+    ``schedule`` selects the fused kernel's grid schedule
+    (``"rotate_once"`` / ``"revisit"`` / ``"streamed"``; ``None`` defers
+    to ``REPRO_QUANT_DOT_SCHEDULE``). It is a dispatch-level knob, not
+    plan configuration: every schedule is bitwise-identical, so it may
+    be passed alongside an explicit plan. ``"streamed"`` double-buffers
+    the weight-tile DMA against the contraction; under interpret mode it
+    falls back to ``rotate_once`` (warn-once) unless
+    ``REPRO_QUANT_DOT_STREAM_INTERPRET=1``.
     """
     from repro.core.wquant import QTensor
 
@@ -792,11 +816,11 @@ def quant_dot(
                 f"match the plan's {plan.epilogue.mode!r} storage dtype "
                 f"{jnp.dtype(want_dt).name}; quantize with "
                 "wquant.quantize_weight(w, mode)")
-        return _quant_dot_qw(x, wq, sw, plan, interpret)
+        return _quant_dot_qw(x, wq, sw, plan, interpret, schedule)
     if w.shape[0] != n:
         raise ValueError(
             f"weight has contraction dim {w.shape[0]}, expected {n}")
-    return _quant_dot_w(x, w, plan, interpret)
+    return _quant_dot_w(x, w, plan, interpret, schedule)
 
 
 # ----------------------------------------------------- expert consumers
@@ -848,8 +872,9 @@ def _experts_einsum_qw(x, wq, sw, plan: HadamardPlan, interpret: bool):
     return out.astype(x.dtype)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
-def _quant_dot_experts_qw(x, wq, sw, plan: HadamardPlan, interpret: bool):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _quant_dot_experts_qw(x, wq, sw, plan: HadamardPlan, interpret: bool,
+                          schedule=None):
     """Serving form for stacked expert weights, PRE-quantized (zero
     per-forward weight quantization), differentiable in x only (STE).
 
@@ -858,18 +883,21 @@ def _quant_dot_experts_qw(x, wq, sw, plan: HadamardPlan, interpret: bool):
     per-token quantize AND the per-expert contraction in ONE pallas_call,
     no HBM round trip of (q, scales); otherwise the einsum form
     (``_experts_einsum_qw``: grouped sizes, active meshes via GSPMD,
-    backends without the expert kernel)."""
+    backends without the expert kernel). ``schedule`` picks the fused
+    kernel's grid schedule (``"streamed"`` = DMA-ring weight prefetch);
+    the einsum form has no grid, so there it is ignored."""
     if _qd_experts_fusable(plan):
         return get_backend(plan.backend).quant_dot_experts(
-            x, wq, sw, plan, interpret)
+            x, wq, sw, plan, interpret, schedule)
     return _experts_einsum_qw(x, wq, sw, plan, interpret)
 
 
-def _qd_experts_qw_fwd(x, wq, sw, plan, interpret):
-    return _quant_dot_experts_qw(x, wq, sw, plan, interpret), (wq, sw)
+def _qd_experts_qw_fwd(x, wq, sw, plan, interpret, schedule):
+    return (_quant_dot_experts_qw(x, wq, sw, plan, interpret, schedule),
+            (wq, sw))
 
 
-def _qd_experts_qw_bwd(plan, interpret, res, g):
+def _qd_experts_qw_bwd(plan, interpret, schedule, res, g):
     # STE: out ~= had(x) @ W per expert with W = dequant(wq, sw); the
     # quantized weight and its scales are statistics with zero pullback.
     wq, sw = res
@@ -884,25 +912,27 @@ def _qd_experts_qw_bwd(plan, interpret, res, g):
 _quant_dot_experts_qw.defvjp(_qd_experts_qw_fwd, _qd_experts_qw_bwd)
 
 
-def _quant_dot_experts_w_impl(x, w, plan, interpret):
+def _quant_dot_experts_w_impl(x, w, plan, interpret, schedule=None):
     from repro.core.wquant import quantize_weight
 
     qt = quantize_weight(w, plan.epilogue.mode)         # (E,f,d), (E,1,d)
-    return _quant_dot_experts_qw(x, qt.q, qt.scale, plan, interpret)
+    return _quant_dot_experts_qw(x, qt.q, qt.scale, plan, interpret,
+                                 schedule)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
-def _quant_dot_experts_w(x, w, plan: HadamardPlan, interpret: bool):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _quant_dot_experts_w(x, w, plan: HadamardPlan, interpret: bool,
+                         schedule=None):
     """Training einsum form: full-precision expert weights, quantized per
     (expert, out-channel) on the fly. STE through BOTH quantizations."""
-    return _quant_dot_experts_w_impl(x, w, plan, interpret)
+    return _quant_dot_experts_w_impl(x, w, plan, interpret, schedule)
 
 
-def _qd_experts_w_fwd(x, w, plan, interpret):
-    return _quant_dot_experts_w_impl(x, w, plan, interpret), (x, w)
+def _qd_experts_w_fwd(x, w, plan, interpret, schedule):
+    return _quant_dot_experts_w_impl(x, w, plan, interpret, schedule), (x, w)
 
 
-def _qd_experts_w_bwd(plan, interpret, res, g):
+def _qd_experts_w_bwd(plan, interpret, schedule, res, g):
     x, w = res
     stripped = _strip(plan)
     gf = g.astype(jnp.float32)
@@ -917,7 +947,8 @@ _quant_dot_experts_w.defvjp(_qd_experts_w_fwd, _qd_experts_w_bwd)
 
 
 def quant_dot_experts(x, w, plan: HadamardPlan,
-                      interpret: Optional[bool] = None) -> jnp.ndarray:
+                      interpret: Optional[bool] = None,
+                      schedule: Optional[str] = None) -> jnp.ndarray:
     """Per-expert quant_dot: ``einsum('becf,efd->becd')`` semantics with
     the shared online Hadamard on the dispatched activations (all experts
     share d_ff) and real int8/fp8 expert weights with
@@ -933,8 +964,9 @@ def quant_dot_experts(x, w, plan: HadamardPlan,
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     if isinstance(w, QTensor):
-        return _quant_dot_experts_qw(x, w.q, w.scale, plan, interpret)
-    return _quant_dot_experts_w(x, w, plan, interpret)
+        return _quant_dot_experts_qw(x, w.q, w.scale, plan, interpret,
+                                     schedule)
+    return _quant_dot_experts_w(x, w, plan, interpret, schedule)
 
 
 # --------------------------------------------- declarative rotation sites
@@ -1023,6 +1055,8 @@ class QuantDotSpec:
     The spec pins everything about the site that is not the weight value:
     transform size, quantization mode ('none' = unquantized matmul),
     whether the site rotates, scale granularity, backend/tiling overrides,
+    the fused kernel's grid ``schedule`` (``"streamed"`` = DMA-ring weight
+    prefetch; ``None`` defers to the env/default),
     and the weight's LOGICAL sharding axes -- which make the bound call
     mesh-aware: under an active sharding-rules mesh the out-channel axis
     resolves to mesh axes, folds into the plan cache key, and dispatch
@@ -1044,12 +1078,20 @@ class QuantDotSpec:
     block_m: Optional[int] = None
     compute_dtype: Optional[str] = None
     weight_axes: Optional[Tuple[Optional[str], ...]] = None
+    schedule: Optional[str] = None
 
     def __post_init__(self):
         if self.mode != "none" and self.mode not in QSPECS:
             raise ValueError(
                 f"unknown quantization mode {self.mode!r}; expected 'none' "
                 f"or one of {sorted(QSPECS)}")
+        if self.schedule is not None:
+            from repro.kernels.quant_dot import SCHEDULES
+
+            if self.schedule not in SCHEDULES:
+                raise ValueError(
+                    f"unknown quant_dot schedule {self.schedule!r}; "
+                    f"expected one of {SCHEDULES}")
 
     @classmethod
     def for_config(cls, n: int, cfg, *,
@@ -1123,7 +1165,8 @@ class QuantDotSpec:
             if interpret is None:
                 interpret = jax.default_backend() != "tpu"
             plan = self.plan(x.dtype, d=w.q.shape[-1])
-            return _quant_dot_qw(x, w.q, w.scale, plan, interpret)
+            return _quant_dot_qw(x, w.q, w.scale, plan, interpret,
+                                 self.schedule)
         # no rotation site: real quantized matmul, pre-quantized weight
         from repro.kernels.quant_dot import epilogue_dot
 
@@ -1148,7 +1191,7 @@ class QuantDotSpec:
         plan = self.plan(x.dtype, d=w.shape[-1])
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
-        return _quant_dot_w(x, w, plan, interpret)
+        return _quant_dot_w(x, w, plan, interpret, self.schedule)
 
     # ----------------------------------------------------------- experts
     def bind_experts(self, w, *, interpret: Optional[bool] = None):
@@ -1175,7 +1218,8 @@ class QuantDotSpec:
             return self._apply_experts_raw(w.dequant(x.dtype), interpret, x)
         if self.rotate:
             return quant_dot_experts(x, w, self.plan(x.dtype),
-                                     interpret=interpret)
+                                     interpret=interpret,
+                                     schedule=self.schedule)
         from repro.core.quant import quantize
 
         xq = quantize(x, self.mode, axis=-1 if self.per_token else None)
@@ -1196,4 +1240,5 @@ class QuantDotSpec:
             return jnp.einsum("becf,efd->becd", xq,
                               quantize(w, self.mode, axis=-2))
         return quant_dot_experts(x, w, self.plan(x.dtype),
-                                 interpret=interpret)
+                                 interpret=interpret,
+                                 schedule=self.schedule)

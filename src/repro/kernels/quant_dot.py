@@ -44,6 +44,45 @@ transform-amortization benchmark; both schedules are bitwise identical
 for int8 (the rotation/quantize/contraction math is unchanged -- only
 *when* the transform runs differs).
 
+**Streamed weight DMA** (``schedule="streamed"``): rotate-once made the
+out-channel axis j sequential, which also made every weight-tile fetch
+SYNCHRONOUS -- the implicit BlockSpec pipeline stalls the MXU between
+bursts waiting on the (n, bn) tile of step j. The streamed schedule
+keeps the rotate-once structure but takes over the weight movement with
+a manual two-slot VMEM ring: the weight and scale operands are passed as
+HBM/ANY-memory-space refs (no BlockSpec slicing), and at grid step j the
+kernel
+
+  * j == 0: starts the async copy of tile 0 into slot 0 (the ring
+    warm-up -- the copy flies while the rotation+quantize below it runs,
+    so even the first tile's latency hides behind the transform), then
+    rotates/quantizes into the scratch exactly as rotate-once does;
+  * every j < nj-1: starts the async copy of tile j+1 into slot
+    ``(j+1) % 2`` BEFORE contracting tile j -- the DMA of the next tile
+    overlaps the current MXU burst;
+  * waits on slot ``j % 2``'s semaphore pair (one DMA semaphore per ring
+    slot, weight and scale copies tracked separately), then contracts
+    from that slot.
+
+Slot parity resets at each new (expert, row block) pair for free: the
+slot index is ``j % 2`` of the RESTARTED j loop and the j == 0 warm-up
+re-primes slot 0, while the ``j + 1 < nj`` guard drains all in-flight
+copies before the row block ends -- no DMA crosses a row-block (or
+expert) boundary. ``quant_dot_blocks`` charges the second weight-tile
+slot and the scale ring when sizing streamed blocks, so streamed block
+sizes never oversubscribe VMEM.
+
+Interpret mode has no real DMA engine (the XLA interpreter simulates
+``make_async_copy`` synchronously), so off-TPU dispatch of
+``schedule="streamed"`` degrades to ``rotate_once`` -- warned once per
+process and counted in ``TRACE_COUNTS[("quant_dot", "stream_fallback")]``
+(mirroring the sharded-dispatch ``_sharded_fallback`` observability).
+Setting ``REPRO_QUANT_DOT_STREAM_INTERPRET=1`` overrides the fallback
+and runs the real streamed body under the interpreter: the simulated
+copies are synchronous (no overlap win) but bit-exact, which is how the
+schedule-parity tests and the bench A/B exercise the streamed kernels
+off-TPU.
+
 ``pallas_quant_dot_experts`` extends the same schedule to the stacked
 MoE expert weights on a 3-D (expert, row blocks, out-channel blocks)
 grid, so the expert consumer stops splitting into a rotate+quantize
@@ -58,6 +97,7 @@ from __future__ import annotations
 
 import functools
 import os
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -77,8 +117,8 @@ from repro.kernels.registry import (
 )
 
 __all__ = ["pallas_quant_dot", "pallas_quant_dot_experts", "xla_quant_dot",
-           "epilogue_dot", "quant_dot_blocks", "SCHEDULE_ENV_VAR",
-           "SCHEDULES"]
+           "epilogue_dot", "quant_dot_blocks", "BlockDecision",
+           "SCHEDULE_ENV_VAR", "SCHEDULES", "STREAM_INTERPRET_ENV"]
 
 _CONTRACT = (((1,), (0,)), ((), ()))  # plain (m, k) @ (k, n)
 
@@ -92,7 +132,19 @@ _INT32_SAFE_K = 1 << 17
 _FP8_OPERAND_BYTES = 3
 
 SCHEDULE_ENV_VAR = "REPRO_QUANT_DOT_SCHEDULE"
-SCHEDULES = ("rotate_once", "revisit")
+SCHEDULES = ("rotate_once", "revisit", "streamed")
+
+# Set to a truthy value ("1"/"true"/"force") to run the REAL streamed
+# kernel body under interpret mode instead of the rotate_once fallback:
+# the interpreter simulates each async copy synchronously (no overlap
+# win, bit-exact results) -- the hook the schedule-parity tests and the
+# bench A/B use to exercise the DMA ring off-TPU.
+STREAM_INTERPRET_ENV = "REPRO_QUANT_DOT_STREAM_INTERPRET"
+
+# Once-per-process warning guard for the streamed->rotate_once interpret
+# fallback; TRACE_COUNTS[("quant_dot", "stream_fallback")] keeps counting
+# every dispatch (tests reset neither).
+_STREAM_FALLBACK_WARNED = [False]
 
 
 def _operand_from_q(q, mode):
@@ -150,14 +202,58 @@ def _operand_bytes(mode: str) -> int:
     return 1 if QSPECS[mode][2] else 2
 
 
+class BlockDecision(tuple):
+    """The ``(block_m, block_n)`` tile decision, as a tuple subclass so
+    every historical ``bm, bn = quant_dot_blocks(...)`` unpack (and
+    ``== (bm, bn)`` comparison) keeps working, carrying the metadata the
+    benches log alongside the tiles:
+
+    * ``schedule``   -- the grid schedule the sizes were charged for
+      (the streamed DMA ring costs a second weight-tile slot + a scale
+      ring, so its block sizes can be narrower);
+    * ``vmem_bytes`` -- the estimated VMEM high-water mark of the chosen
+      tiles under that schedule (<= the kernel budget by construction).
+    """
+
+    schedule: str
+    vmem_bytes: int
+
+    def __new__(cls, block_m: int, block_n: int, schedule: str,
+                vmem_bytes: int):
+        self = super().__new__(cls, (block_m, block_n))
+        self.schedule = schedule
+        self.vmem_bytes = vmem_bytes
+        return self
+
+    @property
+    def block_m(self) -> int:
+        return self[0]
+
+    @property
+    def block_n(self) -> int:
+        return self[1]
+
+    def __repr__(self):
+        return (f"BlockDecision(block_m={self[0]}, block_n={self[1]}, "
+                f"schedule={self.schedule!r}, vmem_bytes={self.vmem_bytes})")
+
+
 def quant_dot_blocks(n: int, d: int, m: int, dtype, compute_dtype,
-                     mode: str, block_m=None, block_n=None):
-    """(block_m, block_n) for the fused kernel, charging every VMEM
-    resident of the rotate-once schedule: the input tile + compute-dtype
+                     mode: str, block_m=None, block_n=None,
+                     schedule: str = "rotate_once") -> BlockDecision:
+    """The tile decision for the fused kernel, charging every VMEM
+    resident of the requested schedule: the input tile + compute-dtype
     working copy per row, the SCRATCH dot-operand tile (int8 / bf16) + the
-    per-row f32 scale that live across the j loop, the (n, block_n)
-    weight tile, the (block_m, block_n) output tile, and the
-    per-out-channel scales.
+    per-row f32 scale that live across the j loop, the weight tile(s),
+    the (block_m, block_n) output tile, and the per-out-channel scales.
+
+    ``schedule="streamed"`` charges the DMA ring on top: a SECOND
+    (n, block_n) weight-tile slot in the storage dtype plus the two-slot
+    f32 scale ring (the DMA semaphores are register-file residents --
+    free as far as this budget is concerned), so streamed block sizes
+    never oversubscribe VMEM. The chosen schedule and the estimated VMEM
+    high-water mark ride along on the returned :class:`BlockDecision`
+    (a (block_m, block_n) tuple) so benches can record the decision.
 
     A user-pinned ``block_m`` (``plan.block_m``) is honored BEFORE any
     sizing decision, so the weight-tile / ``block_n`` tradeoff is
@@ -174,9 +270,20 @@ def quant_dot_blocks(n: int, d: int, m: int, dtype, compute_dtype,
     is_int = QSPECS[mode][2]
     qb = _operand_bytes(mode)       # scratch operand bytes/element
     wb = 1 if is_int else _FP8_OPERAND_BYTES
+    swb = 4                         # f32 per-out-channel scale tile
+    if schedule == "streamed":
+        # the ring's second weight slot holds the 1-byte STORAGE grid for
+        # both paths (the fp8 bf16-embedding temporary is made per
+        # contraction, never per slot), and the scale tile doubles
+        wb += 1
+        swb *= 2
     # per-row residents independent of bn: input tile + compute copy +
     # scratch operand + f32 scratch scale
     row_fixed = n * (in_b + cb + qb) + 4
+
+    def vmem(bm_, bn_):
+        return bm_ * row_fixed + bn_ * (n * wb + bm_ * in_b + swb)
+
     # bn always steps in 128-lane multiples so the BlockSpec last dim
     # stays MXU-tiled
     bn = min(1024, -(-d // 128) * 128) if block_n is None else block_n
@@ -185,19 +292,20 @@ def quant_dot_blocks(n: int, d: int, m: int, dtype, compute_dtype,
             # pinned rows: the weight/output/sw tiles get everything the
             # rows leave
             avail = _VMEM_BUDGET_BYTES - block_m * row_fixed
-            while bn > 128 and bn * (n * wb + block_m * in_b + 4) > avail:
+            while bn > 128 and bn * (n * wb + block_m * in_b + swb) > avail:
                 bn -= 128
-        return block_m, bn
+        return BlockDecision(block_m, bn, schedule, vmem(block_m, bn))
     if block_n is None:
         # joint sizing: cap the weight tile at half the budget (oversizing
         # it starves block_m), then size the rows from the remainder
         while n * bn * wb > _VMEM_BUDGET_BYTES // 2 and bn > 128:
             bn -= 128
     per_row = row_fixed + bn * in_b
-    bm = max(8, (_VMEM_BUDGET_BYTES - n * bn * wb) // per_row)
+    bm = max(8, (_VMEM_BUDGET_BYTES - bn * (n * wb + swb)) // per_row)
     bm = min(bm, 256, m)
     sub = 16 if in_b == 2 else 8
-    return max(sub, (bm // sub) * sub), bn
+    bm = max(sub, (bm // sub) * sub)
+    return BlockDecision(bm, bn, schedule, vmem(bm, bn))
 
 
 def _rotate_quantize_block(x, mats_ref, *, n: int, mode: str,
@@ -239,6 +347,81 @@ def _quant_dot_kernel_rotate_once(x_ref, mats_ref, wq_ref, sw_ref, o_ref,
     o_ref[...] = (acc * s_ref[...] * sw_ref[...]).astype(o_ref.dtype)
 
 
+def _ring_dmas(make_w, make_s, j, nj: int):
+    """The two-slot DMA ring protocol shared by the streamed kernels.
+
+    ``make_w(slot, jj)`` / ``make_s(slot, jj)`` build the async-copy
+    descriptors for out-channel tile ``jj`` of the weight / scale operand
+    into ring slot ``slot`` (each descriptor pairs a VMEM slot with its
+    own DMA semaphore, weight and scale copies tracked separately).
+
+    Calling this STARTS the j == 0 warm-up copy into slot 0 (so the
+    caller's rotate+quantize below overlaps even the first tile's
+    latency) and returns ``finish()``, which the caller invokes right
+    before the contraction: it starts the prefetch of tile j+1 into the
+    opposite slot (guarded by ``j + 1 < nj``, so no copy is ever in
+    flight when the row block's j loop ends -- the slot parity of the
+    next (expert, row block) pair resets cleanly to 0), waits on slot
+    ``j % 2``'s semaphores, and returns that slot index."""
+    slot = jax.lax.rem(j, 2)
+
+    @pl.when(j == 0)
+    def _warm_up():
+        make_w(0, j).start()
+        make_s(0, j).start()
+
+    def finish():
+        @pl.when(j + 1 < nj)
+        def _prefetch_next():
+            make_w(1 - slot, j + 1).start()
+            make_s(1 - slot, j + 1).start()
+
+        make_w(slot, j).wait()
+        make_s(slot, j).wait()
+        return slot
+
+    return finish
+
+
+def _quant_dot_kernel_streamed(x_ref, mats_ref, wq_hbm, sw_hbm, o_ref,
+                               q_ref, s_ref, w_ring, sw_ring, w_sem, s_sem,
+                               *, n: int, mode: str, compute_dtype,
+                               bn: int, nj: int):
+    """Streamed grid step: rotate-once structure + a manual two-slot VMEM
+    ring over the weight/scale operands (``wq_hbm``/``sw_hbm`` are
+    UNBLOCKED ANY-memory-space refs; the implicit BlockSpec weight
+    pipeline is replaced by explicit ``make_async_copy``). Order per
+    step j: start the warm-up copy (j == 0 only), rotate+quantize (j == 0
+    only -- overlapping the warm-up copy), start the prefetch of tile
+    j+1, wait on slot j % 2, contract from that slot. The DMA of tile
+    j+1 is therefore in flight DURING the MXU burst of tile j -- the
+    overlap rotate-once lost when it made j sequential."""
+    j = pl.program_id(1)
+
+    def make_w(slot, jj):
+        return pltpu.make_async_copy(
+            wq_hbm.at[:, pl.ds(jj * bn, bn)], w_ring.at[slot],
+            w_sem.at[slot])
+
+    def make_s(slot, jj):
+        return pltpu.make_async_copy(
+            sw_hbm.at[:, pl.ds(jj * bn, bn)], sw_ring.at[slot],
+            s_sem.at[slot])
+
+    finish = _ring_dmas(make_w, make_s, j, nj)
+
+    @pl.when(j == 0)
+    def _rotate():
+        q, s = _rotate_quantize_block(x_ref[...], mats_ref, n=n, mode=mode,
+                                      compute_dtype=compute_dtype)
+        q_ref[...] = _operand_from_q(q, mode)
+        s_ref[...] = s
+
+    slot = finish()
+    acc = _operand_dot(q_ref[...], w_ring[slot], mode)
+    o_ref[...] = (acc * s_ref[...] * sw_ring[slot]).astype(o_ref.dtype)
+
+
 def _quant_dot_kernel_revisit(x_ref, mats_ref, wq_ref, sw_ref, o_ref, *,
                               n: int, mode: str, compute_dtype):
     """The PR-3 schedule, kept as the A/B baseline: EVERY grid step
@@ -251,13 +434,43 @@ def _quant_dot_kernel_revisit(x_ref, mats_ref, wq_ref, sw_ref, o_ref, *,
     o_ref[...] = (acc * s * sw_ref[...]).astype(o_ref.dtype)
 
 
-def _resolve_schedule(schedule) -> str:
+def _stream_interpret_forced() -> bool:
+    return os.environ.get(STREAM_INTERPRET_ENV, "").lower() in (
+        "1", "true", "force")
+
+
+def _resolve_schedule(schedule, interpret: bool = False) -> str:
+    """Resolve the grid schedule: explicit argument, then the
+    ``REPRO_QUANT_DOT_SCHEDULE`` env override, then ``rotate_once`` (the
+    default until the bench gate shows the streamed win on hardware).
+
+    ``streamed`` needs a real DMA engine; under ``interpret=True`` (any
+    backend without async copies runs the kernels through the XLA
+    interpreter) it degrades to ``rotate_once`` -- warned once per
+    process, counted in ``TRACE_COUNTS[("quant_dot", "stream_fallback")]``
+    on every dispatch -- unless ``REPRO_QUANT_DOT_STREAM_INTERPRET`` is
+    set, which runs the real streamed body on the interpreter's
+    synchronous DMA simulation (the parity-test / bench hook)."""
     if schedule is None:
         schedule = os.environ.get(SCHEDULE_ENV_VAR) or "rotate_once"
     if schedule not in SCHEDULES:
         raise ValueError(
             f"unknown quant_dot schedule {schedule!r}; expected one of "
             f"{SCHEDULES}")
+    if schedule == "streamed" and interpret and not _stream_interpret_forced():
+        TRACE_COUNTS[("quant_dot", "stream_fallback")] += 1
+        if not _STREAM_FALLBACK_WARNED[0]:
+            _STREAM_FALLBACK_WARNED[0] = True
+            warnings.warn(
+                "quant_dot schedule 'streamed' requires a real DMA engine; "
+                "interpret mode falls back to 'rotate_once' (same outputs, "
+                "no async weight prefetch). Set "
+                f"{STREAM_INTERPRET_ENV}=1 to run the streamed kernel on "
+                "the interpreter's synchronous DMA simulation. (warned "
+                "once per process; TRACE_COUNTS[('quant_dot', "
+                "'stream_fallback')] keeps counting)",
+                RuntimeWarning, stacklevel=3)
+        return "rotate_once"
     return schedule
 
 
@@ -270,12 +483,14 @@ def pallas_quant_dot(x, wq, sw, plan, interpret: bool, schedule=None,
     (..., d) in the plan's io dtype.
 
     ``schedule`` selects the grid schedule (default ``"rotate_once"``,
-    overridable via ``REPRO_QUANT_DOT_SCHEDULE``); ``block_n`` pins the
-    out-channel tile (benchmark A/Bs hold the revisit count fixed with
-    it). Both are static.
+    overridable via ``REPRO_QUANT_DOT_SCHEDULE``; ``"streamed"`` under
+    interpret mode degrades to ``rotate_once`` -- see
+    ``_resolve_schedule``); ``block_n`` pins the out-channel tile
+    (benchmark A/Bs hold the revisit count fixed with it). Both are
+    static.
     """
     return _pallas_quant_dot(x, wq, sw, plan, interpret,
-                             _resolve_schedule(schedule), block_n)
+                             _resolve_schedule(schedule, interpret), block_n)
 
 
 @functools.partial(jax.jit, static_argnames=("plan", "interpret", "schedule",
@@ -292,7 +507,8 @@ def _pallas_quant_dot(x, wq, sw, plan, interpret: bool, schedule: str,
     d = wq.shape[-1]
     sw2 = sw.reshape(1, d).astype(jnp.float32)
     bm, bn = quant_dot_blocks(n, d, m, x.dtype, cd, mode,
-                              block_m=plan.block_m, block_n=block_n)
+                              block_m=plan.block_m, block_n=block_n,
+                              schedule=schedule)
     x2, _ = _pad_rows(x2, bm)
     pad_d = (-d) % bn
     if pad_d:
@@ -302,10 +518,26 @@ def _pallas_quant_dot(x, wq, sw, plan, interpret: bool, schedule: str,
         wq2 = wq
     mp, dp = x2.shape[0], d + pad_d
     common = dict(n=n, mode=mode, compute_dtype=cd)
+    # rotate_once/revisit let the BlockSpec pipeline slice the weight;
+    # streamed takes the weight movement over (ANY-memory-space refs, the
+    # kernel DMAs each tile into its two-slot VMEM ring)
+    wq_spec = pl.BlockSpec((n, bn), lambda i, j: (0, j))
+    sw_spec = pl.BlockSpec((1, bn), lambda i, j: (0, j))
     if schedule == "rotate_once":
         kernel = functools.partial(_quant_dot_kernel_rotate_once, **common)
         scratch = [pltpu.VMEM((bm, n), _scratch_dtype(mode)),
                    pltpu.VMEM((bm, 1), jnp.float32)]
+    elif schedule == "streamed":
+        kernel = functools.partial(_quant_dot_kernel_streamed, **common,
+                                   bn=bn, nj=dp // bn)
+        scratch = [pltpu.VMEM((bm, n), _scratch_dtype(mode)),
+                   pltpu.VMEM((bm, 1), jnp.float32),
+                   pltpu.VMEM((2, n, bn), wq2.dtype),      # weight ring
+                   pltpu.VMEM((2, 1, bn), jnp.float32),    # scale ring
+                   pltpu.SemaphoreType.DMA((2,)),          # weight sems
+                   pltpu.SemaphoreType.DMA((2,))]          # scale sems
+        wq_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+        sw_spec = pl.BlockSpec(memory_space=pltpu.ANY)
     else:
         kernel = functools.partial(_quant_dot_kernel_revisit, **common)
         scratch = []
@@ -316,8 +548,8 @@ def _pallas_quant_dot(x, wq, sw, plan, interpret: bool, schedule: str,
             pl.BlockSpec((bm, n), lambda i, j: (i, 0)),
             pl.BlockSpec((mats.shape[0],) + mats.shape[1:],
                          lambda i, j: (0, 0, 0)),
-            pl.BlockSpec((n, bn), lambda i, j: (0, j)),
-            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+            wq_spec,
+            sw_spec,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, dp), jnp.dtype(plan.dtype)),
@@ -353,7 +585,46 @@ def _quant_dot_experts_kernel(x_ref, mats_ref, wq_ref, sw_ref, o_ref,
     o_ref[0] = (acc * s_ref[...] * sw_ref[0]).astype(o_ref.dtype)
 
 
-def pallas_quant_dot_experts(x, wq, sw, plan, interpret: bool):
+def _quant_dot_experts_kernel_streamed(x_ref, mats_ref, wq_hbm, sw_hbm,
+                                       o_ref, q_ref, s_ref, w_ring, sw_ring,
+                                       w_sem, s_sem, *, n: int, mode: str,
+                                       compute_dtype, bn: int, nj: int):
+    """Streamed grid step on the 3-D (expert, row blocks, out-channel
+    blocks) grid: the dense streamed kernel with the DMA sources indexed
+    by the CURRENT expert (``wq_hbm``/``sw_hbm`` stay whole (E, n, d) /
+    (E, 1, d) ANY-memory-space refs; each copy slices expert e's tile
+    j). j restarts at every (expert, row block) pair, so the warm-up
+    re-primes slot 0 and the ring parity resets -- and the ``j + 1 < nj``
+    prefetch guard guarantees no copy is in flight across the pair
+    boundary."""
+    e, j = pl.program_id(0), pl.program_id(2)
+
+    def make_w(slot, jj):
+        return pltpu.make_async_copy(
+            wq_hbm.at[e, :, pl.ds(jj * bn, bn)], w_ring.at[slot],
+            w_sem.at[slot])
+
+    def make_s(slot, jj):
+        return pltpu.make_async_copy(
+            sw_hbm.at[e, :, pl.ds(jj * bn, bn)], sw_ring.at[slot],
+            s_sem.at[slot])
+
+    finish = _ring_dmas(make_w, make_s, j, nj)
+
+    @pl.when(j == 0)
+    def _rotate():
+        q, s = _rotate_quantize_block(x_ref[0], mats_ref, n=n, mode=mode,
+                                      compute_dtype=compute_dtype)
+        q_ref[...] = _operand_from_q(q, mode)
+        s_ref[...] = s
+
+    slot = finish()
+    acc = _operand_dot(q_ref[...], w_ring[slot], mode)
+    o_ref[0] = (acc * s_ref[...] * sw_ring[slot]).astype(o_ref.dtype)
+
+
+def pallas_quant_dot_experts(x, wq, sw, plan, interpret: bool,
+                             schedule=None, block_n=None):
     """Fused rotate+quantize+GEMM for stacked expert weights: ONE kernel
     over a 3-D (expert, row blocks, out-channel blocks) grid with the
     rotate-once schedule per (expert, row block) -- replacing the PR-4
@@ -363,12 +634,19 @@ def pallas_quant_dot_experts(x, wq, sw, plan, interpret: bool):
     x: (..., E, c, n) dispatched activations; wq: (E, n, d) storage-dtype
     expert weights; sw: (E, 1, d) f32 per-(expert, out-channel) scales.
     Returns (..., E, c, d) in the plan's io dtype.
+
+    ``schedule``/``block_n`` behave exactly as in :func:`pallas_quant_dot`
+    (the streamed DMA ring applies per (expert, row block) pair).
     """
-    return _pallas_quant_dot_experts(x, wq, sw, plan, interpret)
+    return _pallas_quant_dot_experts(x, wq, sw, plan, interpret,
+                                     _resolve_schedule(schedule, interpret),
+                                     block_n)
 
 
-@functools.partial(jax.jit, static_argnames=("plan", "interpret"))
-def _pallas_quant_dot_experts(x, wq, sw, plan, interpret: bool):
+@functools.partial(jax.jit, static_argnames=("plan", "interpret", "schedule",
+                                             "block_n"))
+def _pallas_quant_dot_experts(x, wq, sw, plan, interpret: bool,
+                              schedule: str, block_n):
     TRACE_COUNTS[("pallas", "quant_dot_experts")] += 1
     n = plan.p
     mode = plan.epilogue.mode
@@ -381,7 +659,8 @@ def _pallas_quant_dot_experts(x, wq, sw, plan, interpret: bool):
     m = x3.shape[1]
     sw3 = sw.reshape(E, 1, d).astype(jnp.float32)
     bm, bn = quant_dot_blocks(n, d, m, x.dtype, cd, mode,
-                              block_m=plan.block_m)
+                              block_m=plan.block_m, block_n=block_n,
+                              schedule=schedule)
     pad_m, pad_d = (-m) % bm, (-d) % bn
     if pad_m:
         x3 = jnp.pad(x3, ((0, 0), (0, pad_m), (0, 0)))
@@ -390,8 +669,25 @@ def _pallas_quant_dot_experts(x, wq, sw, plan, interpret: bool):
         wq3 = jnp.pad(wq, ((0, 0), (0, 0), (0, pad_d)))
         sw3 = jnp.pad(sw3, ((0, 0), (0, 0), (0, pad_d)))
     mp, dp = m + pad_m, d + pad_d
-    kernel = functools.partial(_quant_dot_experts_kernel, n=n, mode=mode,
-                               compute_dtype=cd)
+    scratch = [pltpu.VMEM((bm, n), _scratch_dtype(mode)),
+               pltpu.VMEM((bm, 1), jnp.float32)]
+    wq_spec = pl.BlockSpec((1, n, bn), lambda e, i, j: (e, 0, j))
+    sw_spec = pl.BlockSpec((1, 1, bn), lambda e, i, j: (e, 0, j))
+    if schedule == "streamed":
+        kernel = functools.partial(_quant_dot_experts_kernel_streamed,
+                                   n=n, mode=mode, compute_dtype=cd,
+                                   bn=bn, nj=dp // bn)
+        scratch += [pltpu.VMEM((2, n, bn), wq3.dtype),     # weight ring
+                    pltpu.VMEM((2, 1, bn), jnp.float32),   # scale ring
+                    pltpu.SemaphoreType.DMA((2,)),         # weight sems
+                    pltpu.SemaphoreType.DMA((2,))]         # scale sems
+        wq_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+        sw_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+    else:
+        # revisit never grew a 3-D body (the A/B baseline is 2-D only):
+        # anything else runs the rotate-once step
+        kernel = functools.partial(_quant_dot_experts_kernel, n=n,
+                                   mode=mode, compute_dtype=cd)
     out = pl.pallas_call(
         kernel,
         grid=(E, mp // bm, dp // bn),
@@ -399,13 +695,12 @@ def _pallas_quant_dot_experts(x, wq, sw, plan, interpret: bool):
             pl.BlockSpec((1, bm, n), lambda e, i, j: (e, i, 0)),
             pl.BlockSpec((mats.shape[0],) + mats.shape[1:],
                          lambda e, i, j: (0, 0, 0)),
-            pl.BlockSpec((1, n, bn), lambda e, i, j: (e, 0, j)),
-            pl.BlockSpec((1, 1, bn), lambda e, i, j: (e, 0, j)),
+            wq_spec,
+            sw_spec,
         ],
         out_specs=pl.BlockSpec((1, bm, bn), lambda e, i, j: (e, i, j)),
         out_shape=jax.ShapeDtypeStruct((E, mp, dp), jnp.dtype(plan.dtype)),
-        scratch_shapes=[pltpu.VMEM((bm, n), _scratch_dtype(mode)),
-                        pltpu.VMEM((bm, 1), jnp.float32)],
+        scratch_shapes=scratch,
         compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,

@@ -390,16 +390,18 @@ class PallasBackend(Backend):
     def fused_dequant(self, x, plan, interpret):
         return _pallas_fused_dequant(x, plan, interpret)
 
-    def quant_dot(self, x, wq, sw, plan, interpret):
+    def quant_dot(self, x, wq, sw, plan, interpret, schedule=None):
         # lazy import: quant_dot.py imports this module at load time
         from repro.kernels.quant_dot import pallas_quant_dot
 
-        return pallas_quant_dot(x, wq, sw, plan, interpret)
+        return pallas_quant_dot(x, wq, sw, plan, interpret,
+                                schedule=schedule)
 
-    def quant_dot_experts(self, x, wq, sw, plan, interpret):
+    def quant_dot_experts(self, x, wq, sw, plan, interpret, schedule=None):
         from repro.kernels.quant_dot import pallas_quant_dot_experts
 
-        return pallas_quant_dot_experts(x, wq, sw, plan, interpret)
+        return pallas_quant_dot_experts(x, wq, sw, plan, interpret,
+                                        schedule=schedule)
 
 
 # -------------------------------------------------------------------- xla
@@ -426,9 +428,14 @@ class XlaBackend(Backend):
     def transform(self, x, plan, interpret):
         return _xla_transform(x, plan)
 
-    def quant_dot(self, x, wq, sw, plan, interpret):
+    def quant_dot(self, x, wq, sw, plan, interpret, schedule=None):
         # unfused oracle semantics: factored rotate, shared epilogue+dot
-        # math (pjit-shardable -- every op is a reshape/dot)
+        # math (pjit-shardable -- every op is a reshape/dot). Grid
+        # schedules do not apply here (there is no kernel grid); the
+        # name is still validated so typos fail loudly on every backend.
+        from repro.kernels.quant_dot import _resolve_schedule
+
+        _resolve_schedule(schedule)
         from repro.kernels.quant_dot import xla_quant_dot
 
         return xla_quant_dot(x, wq, sw, plan, interpret)

@@ -553,6 +553,252 @@ def test_quant_dot_experts_einsum_under_mesh():
     assert (np.asarray(on_mesh) == np.asarray(off_mesh)).all()
 
 
+# ------------------------------------- streamed DMA-ring grid schedule
+def _stream_events(kjaxpr):
+    """Ordered top-level event list of a streamed kernel jaxpr:
+    ``start_cond`` (a cond whose branch issues an async-copy start --
+    the warm-up at j == 0 or the j+1 prefetch), ``wait`` (a top-level
+    dma_wait), ``dot`` (a top-level dot_general, the contraction)."""
+    from jax.core import ClosedJaxpr
+
+    def _has_dma_start(br):
+        j = br.jaxpr if isinstance(br, ClosedJaxpr) else br
+        return any(q.primitive.name == "dma_start" for q in j.eqns)
+
+    events = []
+    for e in kjaxpr.eqns:
+        if e.primitive.name == "cond" and any(
+                _has_dma_start(br) for br in e.params["branches"]):
+            events.append("start_cond")
+        elif e.primitive.name == "dma_wait":
+            events.append("wait")
+        elif e.primitive.name == "dot_general":
+            events.append("dot")
+    return events
+
+
+def _streamed_jaxpr(d=640, bn=128, experts=False):
+    from repro.core.api import QuantEpilogue, plan_for
+    from repro.kernels.quant_dot import (pallas_quant_dot,
+                                         pallas_quant_dot_experts)
+
+    plan = plan_for(512, backend="pallas", epilogue=QuantEpilogue("int8"))
+    sw = jnp.ones((1, d), jnp.float32)
+    if experts:
+        x = _x((1, 2, 8, 512))
+        wq = jnp.zeros((2, 512, d), jnp.int8)
+        swe = jnp.ones((2, 1, d), jnp.float32)
+        return jax.make_jaxpr(
+            lambda a, q, s: pallas_quant_dot_experts(
+                a, q, s, plan, True, "streamed", bn))(x, wq, swe)
+    x = _x((8, 512))
+    wq = jnp.zeros((512, d), jnp.int8)
+    return jax.make_jaxpr(
+        lambda a, q, s: pallas_quant_dot(a, q, s, plan, True,
+                                         "streamed", bn))(x, wq, sw)
+
+
+@pytest.mark.parametrize("experts", [False, True], ids=["2d", "experts"])
+def test_streamed_prefetch_starts_before_contraction(experts, monkeypatch):
+    """Acceptance (structural): the streamed body kicks off the j+1
+    copy-start BEFORE waiting on the j slot, and every DMA wait precedes
+    the (single) top-level contraction -- the overlap window really
+    exists in the kernel jaxpr rather than degenerate start->wait->dot
+    per tile."""
+    from repro.kernels.quant_dot import STREAM_INTERPRET_ENV
+
+    monkeypatch.setenv(STREAM_INTERPRET_ENV, "1")
+    events = _stream_events(_kernel_jaxpr(_streamed_jaxpr(experts=experts)))
+    assert events.count("dot") == 1, events     # the contraction only
+    first_wait = events.index("wait")
+    dot_at = events.index("dot")
+    # warm-up (j==0) and prefetch (j+1) starts both precede the blocking
+    # wait; the wait pair (weight + scale slots) precedes the dot
+    assert events[:first_wait].count("start_cond") >= 2, events
+    assert first_wait < dot_at and events[first_wait:dot_at].count(
+        "wait") >= 2, events
+    assert "start_cond" not in events[dot_at:], events
+
+
+def test_streamed_keeps_rotate_once_transform_guard(monkeypatch):
+    """Streaming replaces the weight fetch, not the schedule: the
+    transform matmuls stay under the j == 0 cond (once per row block)
+    and exactly one top-level dot_general contracts per tile."""
+    from repro.core.api import QuantEpilogue, plan_for
+    from repro.kernels.quant_dot import STREAM_INTERPRET_ENV
+
+    monkeypatch.setenv(STREAM_INTERPRET_ENV, "1")
+    plan = plan_for(512, backend="pallas", epilogue=QuantEpilogue("int8"))
+    top, in_cond = _dots_by_region(_kernel_jaxpr(_streamed_jaxpr()))
+    assert top == 1, top
+    assert in_cond == plan.num_passes, (in_cond, plan.num_passes)
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
+def test_streamed_bitwise_vs_rotate_once(mode, dtype, monkeypatch):
+    """Acceptance: streamed is bitwise rotate_once across all three quant
+    modes x f32/bf16/fp16 -- d = 600 with block_n = 128 so the last tile
+    is a padded tail (600 = 4*128 + 88) and the ring drains mid-tile."""
+    from repro.core.api import QuantEpilogue, plan_for
+    from repro.kernels.quant_dot import STREAM_INTERPRET_ENV, pallas_quant_dot
+
+    monkeypatch.setenv(STREAM_INTERPRET_ENV, "1")
+    x = _x((23, 512), seed=50, dtype=dtype)
+    wq, sw = quantize_weight(_x((512, 600), seed=51, dtype=dtype) * 0.05,
+                             mode)
+    plan = plan_for(512, dtype=dtype, backend="pallas",
+                    epilogue=QuantEpilogue(mode))
+    a = pallas_quant_dot(x, wq, sw, plan, True, "rotate_once", 128)
+    b = pallas_quant_dot(x, wq, sw, plan, True, "streamed", 128)
+    assert a.dtype == b.dtype == x.dtype
+    assert (np.asarray(a, np.float32) == np.asarray(b, np.float32)).all()
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_streamed_experts_bitwise_vs_rotate_once(mode, monkeypatch):
+    """The 3-D (expert, rows, out-channels) ring resets slot parity at
+    every new (expert, row-block) pair: multiple experts x multiple row
+    blocks x a padded tail tile stay bitwise with the implicit fetch."""
+    from repro.core.api import QuantEpilogue, plan_for
+    from repro.kernels.quant_dot import (STREAM_INTERPRET_ENV,
+                                         pallas_quant_dot_experts)
+
+    monkeypatch.setenv(STREAM_INTERPRET_ENV, "1")
+    x = _x((2, 3, 6, 256), seed=52)
+    qt = quantize_weight(_x((3, 256, 200), seed=53) * 0.1, mode)
+    plan = plan_for(256, backend="pallas", epilogue=QuantEpilogue(mode))
+    a = pallas_quant_dot_experts(x, qt.q, qt.scale, plan, True,
+                                 "rotate_once", 128)
+    b = pallas_quant_dot_experts(x, qt.q, qt.scale, plan, True,
+                                 "streamed", 128)
+    assert (np.asarray(a, np.float32) == np.asarray(b, np.float32)).all()
+
+
+def test_streamed_interpret_fallback_warns_once_and_counts(monkeypatch):
+    """Without the force flag, interpret mode degrades streamed ->
+    rotate_once: warn ONCE per process, tick
+    TRACE_COUNTS[('quant_dot', 'stream_fallback')] every time, stay
+    bitwise (mirrors the PR 5 _sharded_fallback pattern)."""
+    import repro.kernels.quant_dot as qd
+
+    monkeypatch.delenv(qd.STREAM_INTERPRET_ENV, raising=False)
+    monkeypatch.setattr(qd, "_STREAM_FALLBACK_WARNED", [False])
+    x = _x((4, 256), seed=54)
+    wq, sw = quantize_weight(_x((256, 64), seed=55) * 0.1, "int8")
+    plan = plan_for(256, backend="pallas", epilogue=QuantEpilogue("int8"))
+    key = ("quant_dot", "stream_fallback")
+    before = registry.TRACE_COUNTS[key]
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        a = qd.pallas_quant_dot(x, wq, sw, plan, True, "streamed")
+        b = qd.pallas_quant_dot(x, wq, sw, plan, True, "streamed")
+    msgs = [r for r in rec if issubclass(r.category, RuntimeWarning)
+            and "streamed" in str(r.message)]
+    assert len(msgs) == 1, [str(r.message) for r in rec]
+    assert registry.TRACE_COUNTS[key] == before + 2
+    want = qd.pallas_quant_dot(x, wq, sw, plan, True, "rotate_once")
+    assert (np.asarray(a) == np.asarray(want)).all()
+    assert (np.asarray(b) == np.asarray(want)).all()
+    # the force flag suppresses the fallback: streamed really runs
+    monkeypatch.setenv(qd.STREAM_INTERPRET_ENV, "1")
+    after = registry.TRACE_COUNTS[key]
+    forced = qd.pallas_quant_dot(x, wq, sw, plan, True, "streamed")
+    assert registry.TRACE_COUNTS[key] == after
+    assert (np.asarray(forced) == np.asarray(want)).all()
+
+
+def test_quant_dot_blocks_charges_streamed_ring():
+    """Satellite: the block planner charges the second weight-tile slot +
+    double scale slot + ring residency when sizing streamed blocks, and
+    the returned BlockDecision exposes the schedule and the charged VMEM
+    so benches can record them -- while staying a 2-tuple for legacy
+    unpacking."""
+    from repro.kernels.quant_dot import (_VMEM_BUDGET_BYTES, BlockDecision,
+                                         quant_dot_blocks)
+
+    args = (4096, 8192, 1 << 14, jnp.float32, jnp.float32, "int8")
+    base = quant_dot_blocks(*args)
+    streamed = quant_dot_blocks(*args, schedule="streamed")
+    assert isinstance(base, BlockDecision) and isinstance(streamed,
+                                                          BlockDecision)
+    assert base.schedule == "rotate_once" and streamed.schedule == "streamed"
+    # legacy consumers: tuple unpack and equality still work
+    bm, bn = streamed
+    assert (bm, bn) == (streamed.block_m, streamed.block_n)
+    assert quant_dot_blocks(*args, block_m=8, block_n=256,
+                            schedule="streamed") == (8, 256)
+    # both decisions honor the budget; the ring narrows (or holds) bn
+    # and, at equal tiles, charges strictly more VMEM
+    assert base.vmem_bytes <= _VMEM_BUDGET_BYTES
+    assert streamed.vmem_bytes <= _VMEM_BUDGET_BYTES
+    assert streamed.block_n <= base.block_n
+    pinned = dict(block_m=base.block_m, block_n=base.block_n)
+    assert (quant_dot_blocks(*args, schedule="streamed",
+                             **pinned).vmem_bytes >
+            quant_dot_blocks(*args, **pinned).vmem_bytes)
+
+
+def test_quant_dot_schedule_through_public_api(monkeypatch):
+    """The schedule kwarg rides quant_dot / quant_dot_experts /
+    QuantDotSpec end to end (custom_vjp nondiff plumbing) and composes
+    with an explicit plan -- it is dispatch-level, not plan config."""
+    from repro.core.api import QuantDotSpec, quant_dot_experts
+    from repro.kernels.quant_dot import STREAM_INTERPRET_ENV
+
+    monkeypatch.setenv(STREAM_INTERPRET_ENV, "1")
+    x = _x((9, 256), seed=56)
+    w = _x((256, 320), seed=57) * 0.05
+    qt = quantize_weight(w, "int8")
+    want = quant_dot(x, qt, mode="int8", backend="pallas")
+    got = quant_dot(x, qt, mode="int8", backend="pallas",
+                    schedule="streamed")
+    assert (np.asarray(got) == np.asarray(want)).all()
+    # explicit plan + schedule does NOT trip the plan/kwargs guard
+    plan = plan_for(256, backend="pallas", epilogue=QuantEpilogue("int8"))
+    assert (np.asarray(quant_dot(x, qt, plan, schedule="streamed"))
+            == np.asarray(want)).all()
+    # spec-bound site + validation
+    spec = QuantDotSpec(n=256, mode="int8", backend="pallas",
+                        schedule="streamed")
+    assert (np.asarray(spec(x, qt)) == np.asarray(want)).all()
+    with pytest.raises(ValueError, match="schedule"):
+        QuantDotSpec(n=256, schedule="bogus")
+    # STE gradients are schedule-invariant (nondiff argnum plumbing)
+    gx = jax.grad(lambda a: jnp.sum(
+        quant_dot(a, w, mode="int8", backend="pallas",
+                  schedule="streamed") ** 2))(x)
+    gx0 = jax.grad(lambda a: jnp.sum(
+        quant_dot(a, w, mode="int8", backend="pallas") ** 2))(x)
+    assert (np.asarray(gx) == np.asarray(gx0)).all()
+    # experts: spec + function form
+    xe = _x((1, 2, 4, 256), seed=58)
+    qte = quantize_weight(_x((2, 256, 128), seed=59) * 0.1, "int8")
+    eplan = plan_for(256, backend="pallas", epilogue=QuantEpilogue("int8"))
+    ewant = quant_dot_experts(xe, qte, eplan)
+    egot = quant_dot_experts(xe, qte, eplan, schedule="streamed")
+    assert (np.asarray(egot) == np.asarray(ewant)).all()
+
+
+def test_streamed_env_var_resolution(monkeypatch):
+    """REPRO_QUANT_DOT_SCHEDULE=streamed flips the default (the tier-1 CI
+    streamed leg); an explicit schedule argument beats the env."""
+    from repro.kernels.quant_dot import (SCHEDULE_ENV_VAR,
+                                         STREAM_INTERPRET_ENV,
+                                         pallas_quant_dot)
+
+    monkeypatch.setenv(STREAM_INTERPRET_ENV, "1")
+    x = _x((4, 256), seed=60)
+    wq, sw = quantize_weight(_x((256, 64), seed=61) * 0.1, "int8")
+    plan = plan_for(256, backend="pallas", epilogue=QuantEpilogue("int8"))
+    want = pallas_quant_dot(x, wq, sw, plan, True, "rotate_once")
+    monkeypatch.setenv(SCHEDULE_ENV_VAR, "streamed")
+    got = pallas_quant_dot(x, wq, sw, plan, True)       # env default
+    assert (np.asarray(got) == np.asarray(want)).all()
+    got2 = pallas_quant_dot(x, wq, sw, plan, True, "revisit")  # arg wins
+    assert (np.asarray(got2) == np.asarray(want)).all()
+
+
 # ---------------------------------------------------------------- shims
 def test_deprecation_shims_warn_once():
     from repro.kernels import fused_quant, ops
