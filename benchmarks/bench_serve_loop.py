@@ -16,6 +16,12 @@ KV-cache traffic (the whole slot cache is read every decode step --
 decode's binding bandwidth) over that latency. Extra keys (tokens/s,
 occupancy, p99) ride along for the committed BENCH_<tag>.json
 trajectory; ``compare.py`` gates on ``ms``.
+
+The ``serve_loop_overload`` case (PR 8) floods the engine far past
+capacity with a bounded queue and per-request TTLs: its record carries
+the shed / rejected / timed-out / degraded counts and the p99 under
+overload -- the robustness-layer trajectory (graceful load-shedding
+numbers should move deliberately, like the latency numbers).
 """
 from __future__ import annotations
 
@@ -60,6 +66,44 @@ def _engine_case(mode: str, smoke: bool, seed: int = 0):
     return engine, slots, max_len
 
 
+def _overload_case(smoke: bool, seed: int = 0):
+    """Arrival flood: ~4x the sustainable rate, a bounded queue, and
+    TTLs tight enough that queued work expires -- exercising rejection
+    (backpressure), deadline shedding, and in-flight timeouts at once."""
+    import jax
+
+    from repro.launch.mesh import make_local_mesh
+    from repro.launch.steps import make_param_init, param_shardings
+    from repro.serving import ServeEngine, synthetic_stream
+
+    quant = QuantConfig(mode="int8", rotate="hadamard", backend="xla",
+                        kv_quant=True)
+    cfg = scaled_config(get_config("llama3-8b"),
+                        0.004 if smoke else 0.01).with_quant(quant)
+    cfg = dataclasses.replace(cfg, weight_quant="int8")
+    slots = 2 if smoke else 4
+    max_len = 48 if smoke else 128
+    prefill_len = 16 if smoke else 48
+    n_req = 10 if smoke else 48
+    mesh = make_local_mesh(1)
+    with mesh:
+        ps = param_shardings(cfg, mesh)
+        params = jax.jit(make_param_init(cfg), out_shardings=ps)(
+            jax.random.PRNGKey(seed))
+    # queue bounded below the flood size (every submit happens before the
+    # first admission, so n_req - max_queue are rejected outright) and
+    # TTLs tight enough that late-wave queued work expires
+    engine = ServeEngine(cfg, params, mesh, num_slots=slots,
+                         max_len=max_len, prefill_len=prefill_len,
+                         max_queue=max(2, n_req * 3 // 5))
+    stream = synthetic_stream(
+        n_req, vocab_size=cfg.vocab_size, prompt_len=(4, prefill_len),
+        max_new_tokens=(4, 8) if smoke else (8, 24),
+        rate=4.0, seed=seed, deadline_slack=2.0)
+    engine.run(stream)
+    return engine, slots, max_len
+
+
 def run(csv: List[str], smoke: bool = False, records: Optional[List] = None):
     modes = ("none", "int8") if smoke else ("none", "int8", "fp8_e4m3")
     for mode in modes:
@@ -88,6 +132,35 @@ def run(csv: List[str], smoke: bool = False, records: Optional[List] = None):
                 "occupancy": round(s["occupancy"], 3),
                 "p99_ms": round(s["p99_token_ms"], 4),
             })
+
+    engine, slots, max_len = _overload_case(smoke)
+    s = engine.summary()
+    csv.append(
+        f"serve_loop_overload,slots={slots},max_len={max_len},"
+        f"requests={s['requests']:.0f},ok={s.get('status_ok', 0):.0f},"
+        f"timed_out={s.get('status_timed_out', 0):.0f},"
+        f"rejected={s.get('status_rejected', 0):.0f},"
+        f"degraded={s.get('status_degraded', 0):.0f},"
+        f"shed={s.get('shed', 0):.0f},"
+        f"tok_s={s['tokens_per_s']:.1f},"
+        f"p50_token_ms={s['p50_token_ms']:.2f},"
+        f"p99_token_ms={s['p99_token_ms']:.2f}")
+    if records is not None:
+        ms = s["p50_token_ms"]
+        records.append({
+            "bench": "serve_loop_overload",
+            "shape": f"slots{slots}x{max_len}",
+            "dtype": "int8",
+            "backend": "engine",
+            "ms": round(ms, 4),
+            "gbps": round(s["kv_cache_bytes"] / (ms * 1e-3) / 1e9, 3),
+            "p99_ms": round(s["p99_token_ms"], 4),
+            "ok": int(s.get("status_ok", 0)),
+            "timed_out": int(s.get("status_timed_out", 0)),
+            "rejected": int(s.get("status_rejected", 0)),
+            "degraded": int(s.get("status_degraded", 0)),
+            "shed": int(s.get("shed", 0)),
+        })
     return csv
 
 

@@ -44,7 +44,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import warnings
 from typing import Any, Optional, Tuple, Union
 
 import jax
@@ -442,11 +441,6 @@ def _resolve_mesh_axes(weight_axes, d: Optional[int]):
     return axes
 
 
-# Once-per-process-per-reason warning guard for sharded-dispatch
-# fallbacks; the companion TRACE_COUNTS[("sharded_quant_dot", <reason>)]
-# counters keep counting every traced fallback (tests reset neither).
-_SHARDED_FALLBACK_WARNED = set()
-
 # Trace-time record of the last sharded dispatch decision (row axes the
 # activation was sharded over, whether the shard-local compute was the
 # fused kernel, which backend ran it). Observability hook for tests --
@@ -455,20 +449,18 @@ _LAST_SHARDED_DISPATCH: dict = {}
 
 
 def _sharded_fallback(reason: str, msg: str) -> None:
-    """Record (and warn once per process per reason) that a mesh plan
-    fell back from the sharded/fused hot path. Sharded perf regressions
-    -- a plan silently going replicated, or shard-local compute silently
-    going unfused -- used to be invisible; now they show up in
+    """Record (and warn once per process per reason, via the shared
+    ``registry.warn_once`` idiom) that a mesh plan fell back from the
+    sharded/fused hot path. Sharded perf regressions -- a plan silently
+    going replicated, or shard-local compute silently going unfused --
+    used to be invisible; now they show up in
     ``TRACE_COUNTS[("sharded_quant_dot", reason)]`` and as a one-shot
     ``RuntimeWarning``."""
-    registry.TRACE_COUNTS[("sharded_quant_dot", reason)] += 1
-    if reason not in _SHARDED_FALLBACK_WARNED:
-        _SHARDED_FALLBACK_WARNED.add(reason)
-        warnings.warn(
-            f"sharded quant_dot fallback [{reason}]: {msg} (warned once "
-            "per process; TRACE_COUNTS[('sharded_quant_dot', "
-            f"{reason!r})] keeps counting)",
-            RuntimeWarning, stacklevel=3)
+    registry.warn_once(
+        ("sharded_quant_dot", reason),
+        f"sharded quant_dot fallback [{reason}]: {msg} (warned once "
+        "per process; TRACE_COUNTS[('sharded_quant_dot', "
+        f"{reason!r})] keeps counting)")
 
 
 def _strip_mesh(plan: HadamardPlan) -> HadamardPlan:
@@ -1096,10 +1088,14 @@ class QuantDotSpec:
     @classmethod
     def for_config(cls, n: int, cfg, *,
                    weight_axes: Optional[Tuple] = None) -> "QuantDotSpec":
-        """The spec a QuantConfig implies for an n-point consumer site."""
+        """The spec a QuantConfig implies for an n-point consumer site.
+        ``cfg.schedule`` (when set) pins the fused-kernel grid schedule --
+        the serving degradation ladder relies on this to re-warm one rung
+        down without touching the env override."""
         return cls(n=n, mode=cfg.mode, rotate=cfg.rotating,
                    per_token=cfg.per_token,
                    backend=_cfg_backend_name(cfg.backend),
+                   schedule=getattr(cfg, "schedule", None),
                    weight_axes=weight_axes)
 
     @property

@@ -1,0 +1,95 @@
+"""Numeric guardrails for the serving hot path (``REPRO_NUMERIC_GUARDS``).
+
+The paper's end-to-end claim is that the FP16/BF16 Hadamard rotation keeps
+FP8/INT8 inference *numerically accurate* -- which silently inverts when a
+scale or activation goes non-finite: a single NaN in a decode step poisons
+the slot's logits and every subsequent token, and greedy argmax happily
+emits garbage ids forever. These guards make that failure loud and local:
+
+  * ``rows_ok(x, batch)``  -- jit-compatible per-slot ``isfinite``
+    reduction (used on the decode/prefill logits inside the jitted step;
+    the host reads the (slots,) bool vector it returns and retires a
+    tripped slot as ``degraded`` instead of emitting its tokens);
+  * ``scale_rows_ok(s, batch)`` -- per-token quant scales must be finite
+    AND strictly positive (a zero scale would collapse the whole row to
+    zero and dequantize to garbage);
+  * ``guard_dequant(y, s)`` -- the in-trace scale check wired into
+    ``core.quant.quantize``: wherever a per-token scale is non-finite or
+    non-positive, the dequantized row is overwritten with NaN so the
+    step-boundary logits guard attributes the failure to the right slot.
+    Identity (bitwise) on healthy scales.
+
+Placement rule (why the scale check is *trace-local* poisoning rather
+than a cross-site collector): quantize runs inside ``jax.checkpoint``
+block bodies (remat) and Pallas/custom_vjp sub-jaxprs, whose tracers may
+not escape to the step's outer trace -- any scheme that accumulates scale
+tensors for an end-of-step reduction leaks tracers the moment remat is
+on. Folding the verdict into the data path keeps every check inside the
+trace that produced it; scales internal to the fused kernels are covered
+transitively (a non-finite kernel scale yields non-finite outputs, which
+the logits guard catches at the step boundary).
+
+Everything is opt-in: with ``REPRO_NUMERIC_GUARDS`` unset the serving
+step compiles WITHOUT any guard reductions and is bit-identical to the
+pre-guard executable -- and the guarded step's tokens are bitwise the
+unguarded step's tokens too (guards observe/poison-on-failure, never
+perturb healthy values; asserted in tests/test_faults.py).
+"""
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+__all__ = [
+    "GUARDS_ENV",
+    "guards_enabled",
+    "rows_ok",
+    "scale_rows_ok",
+    "guard_dequant",
+]
+
+GUARDS_ENV = "REPRO_NUMERIC_GUARDS"
+
+
+def guards_enabled() -> bool:
+    """Opt-in flag, read at engine/step construction (and trace) time --
+    NOT per executed step: the guard ops are traced into the jitted
+    executable."""
+    return os.environ.get(GUARDS_ENV, "").lower() in ("1", "true", "on")
+
+
+def _per_row(ok: jnp.ndarray, batch: int) -> jnp.ndarray:
+    """Reduce an elementwise bool array to a (batch,) per-slot vector:
+    per-row when the leading axis is the slot axis, otherwise a global
+    all() broadcast to every slot (conservative: a poisoned tensor the
+    guard cannot attribute flags every in-flight request)."""
+    if ok.ndim >= 1 and ok.shape[0] == batch:
+        axes = tuple(range(1, ok.ndim))
+        return jnp.all(ok, axis=axes) if axes else ok
+    return jnp.broadcast_to(jnp.all(ok), (batch,))
+
+
+def rows_ok(x: jnp.ndarray, batch: int) -> jnp.ndarray:
+    """(batch,) bool: every element of slot b's row of ``x`` is finite.
+    jit-compatible (a single ``isfinite`` + ``all`` reduction)."""
+    return _per_row(jnp.isfinite(x.astype(jnp.float32)), batch)
+
+
+def scale_rows_ok(s: jnp.ndarray, batch: int) -> jnp.ndarray:
+    """(batch,) bool: slot b's per-token quant scales are finite and
+    strictly positive (NaN/Inf/zero-scale all trip)."""
+    f = s.astype(jnp.float32)
+    return _per_row(jnp.isfinite(f) & (f > 0), batch)
+
+
+def guard_dequant(y: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    """Scale guard at the quantize site (trace-local, remat-safe): rows
+    whose scale is non-finite or non-positive are poisoned with NaN so
+    the failure surfaces at the step-boundary logits guard attributed to
+    the right slot. ``s`` is the keepdims absmax scale from
+    ``_quantize_rows`` (broadcasts against ``y``). Bitwise identity on
+    healthy scales; called only when ``guards_enabled()``."""
+    f = s.astype(jnp.float32)
+    bad = ~(jnp.isfinite(f) & (f > 0))
+    return jnp.where(bad, jnp.asarray(jnp.nan, y.dtype), y)

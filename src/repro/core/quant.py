@@ -16,6 +16,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import guards
+
 __all__ = ["QuantConfig", "quantize", "quant_dot", "kv_quantize"]
 
 
@@ -30,12 +32,18 @@ class QuantConfig:
              | 'ref' (scalar FWHT oracle) | 'auto' (registry selection:
              REPRO_HADAMARD_BACKEND env override, then size/platform)
     kv_quant: quantize the KV cache (FP8 attention use-case of the paper)
+    schedule: fused quant_dot grid schedule for every consumer site this
+             config implies ('rotate_once' | 'revisit' | 'streamed';
+             None defers to REPRO_QUANT_DOT_SCHEDULE, then the default).
+             The serving engine's degradation ladder re-warms on
+             config replicas that pin this field one rung down.
     """
     mode: str = "none"
     rotate: str = "none"
     backend: str = "xla"
     kv_quant: bool = False
     per_token: bool = True
+    schedule: Optional[str] = None
 
     _MODES = ("none", "int8", "fp8_e4m3", "fp8_e5m2")
     _ROTATES = ("none", "hadamard")
@@ -48,6 +56,13 @@ class QuantConfig:
             raise ValueError(f"unknown rotate {self.rotate!r}; expected one of {self._ROTATES}")
         if self.backend not in self._BACKENDS:
             raise ValueError(f"unknown backend {self.backend!r}; expected one of {self._BACKENDS}")
+        if self.schedule is not None:
+            from repro.kernels.quant_dot import SCHEDULES  # lazy: no cycle
+
+            if self.schedule not in SCHEDULES:
+                raise ValueError(
+                    f"unknown quant_dot schedule {self.schedule!r}; "
+                    f"expected None or one of {SCHEDULES}")
 
     @property
     def enabled(self) -> bool:
@@ -87,7 +102,13 @@ def quantize(x: jnp.ndarray, mode: str, axis: Optional[int] = -1) -> jnp.ndarray
     if mode not in QSPECS:
         raise ValueError(f"unknown quant mode {mode!r}")
     q, s = _quantize_rows(x.astype(jnp.float32), mode, axis=axis)
-    return _dequantize(q, s, mode).astype(x.dtype)
+    y = _dequantize(q, s, mode).astype(x.dtype)
+    # Numeric-guard seam (opt-in, trace-local so it is remat-safe): rows
+    # with a non-finite/non-positive scale are poisoned with NaN, which
+    # the serving step's logits guard attributes to the right slot.
+    if guards.guards_enabled():
+        y = guards.guard_dequant(y, s)
+    return y
 
 
 def quant_dot(x: jnp.ndarray, w: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:

@@ -22,7 +22,6 @@ grouped transforms (exactness preserved; see DESIGN.md section 3).
 """
 from __future__ import annotations
 
-import warnings
 from typing import Optional
 
 import jax
@@ -75,17 +74,16 @@ def online_hadamard(x: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
 #     spec = QuantDotSpec.for_config(n, cfg, weight_axes=("dff", "fsdp"))
 #     y = spec.bind(w)(x)
 #
-_warned: set = set()  # one-shot per function per process
-
-
 def _warn_once(name: str, repl: str):
-    if name not in _warned:
-        _warned.add(name)
-        warnings.warn(
-            f"repro.core.rotations.{name} is deprecated; use {repl} "
-            "(see DESIGN.md section 7)",
-            DeprecationWarning, stacklevel=3,
-        )
+    # one DeprecationWarning per process per shim, counted every call in
+    # TRACE_COUNTS[("deprecated", name)] (shared registry warn-once idiom)
+    from repro.kernels.registry import warn_once
+
+    warn_once(
+        ("deprecated", name),
+        f"repro.core.rotations.{name} is deprecated; use {repl} "
+        "(see DESIGN.md section 7)",
+        category=DeprecationWarning, stacklevel=4)
 
 
 def online_hadamard_quantize(

@@ -19,7 +19,6 @@ fp8 epilogues validate against the same ground truth.
 """
 from __future__ import annotations
 
-import warnings
 from typing import Optional, Tuple
 
 import jax.numpy as jnp
@@ -27,24 +26,24 @@ import jax.numpy as jnp
 from repro.core.api import QuantEpilogue, hadamard
 from repro.core.hadamard import resolve_scale
 from repro.kernels.ref import is_pow2
-from repro.kernels.registry import MAX_KERNEL_SIZE, QSPECS, _quantize_rows
+from repro.kernels.registry import (MAX_KERNEL_SIZE, QSPECS, _quantize_rows,
+                                    warn_once)
 
 __all__ = ["fused_hadamard_quantize", "ref_fused"]
 
-_warned = False  # one-shot: warn on first use per process, then stay quiet
+# warn-once key: one DeprecationWarning per process, with a
+# TRACE_COUNTS[WARN_KEY] tick on every call (shared registry idiom).
+WARN_KEY = ("deprecated", "kernels.fused_quant.fused_hadamard_quantize")
 
 
 def _warn_once():
-    global _warned
-    if not _warned:
-        _warned = True
-        warnings.warn(
-            "repro.kernels.fused_quant.fused_hadamard_quantize is "
-            "deprecated; use repro.core.api.hadamard with a "
-            "QuantEpilogue (or repro.core.api.quant_dot for the fused "
-            "GEMM consumer)",
-            DeprecationWarning, stacklevel=3,
-        )
+    warn_once(
+        WARN_KEY,
+        "repro.kernels.fused_quant.fused_hadamard_quantize is "
+        "deprecated; use repro.core.api.hadamard with a "
+        "QuantEpilogue (or repro.core.api.quant_dot for the fused "
+        "GEMM consumer)",
+        category=DeprecationWarning, stacklevel=4)
 
 
 def fused_hadamard_quantize(

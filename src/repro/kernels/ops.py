@@ -13,29 +13,28 @@ and optionally prebuild a plan for the hot path.
 """
 from __future__ import annotations
 
-import warnings
 from typing import Optional
 
 import jax.numpy as jnp
 
 from repro.core.api import hadamard as _hadamard
 from repro.kernels.ref import is_pow2
+from repro.kernels.registry import warn_once
 
 __all__ = ["hadamard"]
 
-_warned = False  # one-shot: warn on first use per process, then stay quiet
+# warn-once key: one DeprecationWarning per process, with a
+# TRACE_COUNTS[WARN_KEY] tick on every call (shared registry idiom).
+WARN_KEY = ("deprecated", "kernels.ops.hadamard")
 
 
 def _warn_once():
-    global _warned
-    if not _warned:
-        _warned = True
-        warnings.warn(
-            "repro.kernels.ops.hadamard is deprecated; use "
-            "repro.core.api.hadamard (optionally with a prebuilt plan_for "
-            "plan for the hot path)",
-            DeprecationWarning, stacklevel=3,
-        )
+    warn_once(
+        WARN_KEY,
+        "repro.kernels.ops.hadamard is deprecated; use "
+        "repro.core.api.hadamard (optionally with a prebuilt plan_for "
+        "plan for the hot path)",
+        category=DeprecationWarning, stacklevel=4)
 
 
 def hadamard(x: jnp.ndarray, scale: Optional[str] = "ortho",

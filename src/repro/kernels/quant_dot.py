@@ -97,7 +97,6 @@ from __future__ import annotations
 
 import functools
 import os
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -114,6 +113,7 @@ from repro.kernels.registry import (
     _quantize_rows,
     _rows,
     _xla_transform,
+    warn_once,
 )
 
 __all__ = ["pallas_quant_dot", "pallas_quant_dot_experts", "xla_quant_dot",
@@ -141,10 +141,10 @@ SCHEDULES = ("rotate_once", "revisit", "streamed")
 # bench A/B use to exercise the DMA ring off-TPU.
 STREAM_INTERPRET_ENV = "REPRO_QUANT_DOT_STREAM_INTERPRET"
 
-# Once-per-process warning guard for the streamed->rotate_once interpret
-# fallback; TRACE_COUNTS[("quant_dot", "stream_fallback")] keeps counting
-# every dispatch (tests reset neither).
-_STREAM_FALLBACK_WARNED = [False]
+# The streamed->rotate_once interpret fallback warns once per process via
+# the shared ``registry.warn_once`` idiom;
+# TRACE_COUNTS[("quant_dot", "stream_fallback")] keeps counting every
+# dispatch (tests reset the warning via WARN_ONCE_SEEN, never the counter).
 
 
 def _operand_from_q(q, mode):
@@ -458,18 +458,15 @@ def _resolve_schedule(schedule, interpret: bool = False) -> str:
             f"unknown quant_dot schedule {schedule!r}; expected one of "
             f"{SCHEDULES}")
     if schedule == "streamed" and interpret and not _stream_interpret_forced():
-        TRACE_COUNTS[("quant_dot", "stream_fallback")] += 1
-        if not _STREAM_FALLBACK_WARNED[0]:
-            _STREAM_FALLBACK_WARNED[0] = True
-            warnings.warn(
-                "quant_dot schedule 'streamed' requires a real DMA engine; "
-                "interpret mode falls back to 'rotate_once' (same outputs, "
-                "no async weight prefetch). Set "
-                f"{STREAM_INTERPRET_ENV}=1 to run the streamed kernel on "
-                "the interpreter's synchronous DMA simulation. (warned "
-                "once per process; TRACE_COUNTS[('quant_dot', "
-                "'stream_fallback')] keeps counting)",
-                RuntimeWarning, stacklevel=3)
+        warn_once(
+            ("quant_dot", "stream_fallback"),
+            "quant_dot schedule 'streamed' requires a real DMA engine; "
+            "interpret mode falls back to 'rotate_once' (same outputs, "
+            "no async weight prefetch). Set "
+            f"{STREAM_INTERPRET_ENV}=1 to run the streamed kernel on "
+            "the interpreter's synchronous DMA simulation. (warned "
+            "once per process; TRACE_COUNTS[('quant_dot', "
+            "'stream_fallback')] keeps counting)")
         return "rotate_once"
     return schedule
 

@@ -33,6 +33,7 @@ from __future__ import annotations
 import collections
 import functools
 import os
+import warnings
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -53,6 +54,8 @@ __all__ = [
     "default_block_m",
     "QSPECS",
     "TRACE_COUNTS",
+    "warn_once",
+    "WARN_ONCE_SEEN",
 ]
 
 BACKEND_ENV_VAR = "REPRO_HADAMARD_BACKEND"
@@ -79,6 +82,28 @@ QSPECS = {
 # keys -- see ``core.api._sharded_fallback`` -- so a mesh plan silently
 # losing the fused/sharded hot path is observable in tests and debugging.
 TRACE_COUNTS: collections.Counter = collections.Counter()
+
+# Keys already warned about via ``warn_once`` -- one warning per process
+# per key, while the companion TRACE_COUNTS entry keeps counting every
+# occurrence. Tests reset individual keys with ``WARN_ONCE_SEEN.discard``
+# (never the counter).
+WARN_ONCE_SEEN: set = set()
+
+
+def warn_once(key: Tuple[str, str], msg: str, *,
+              category=RuntimeWarning, stacklevel: int = 3,
+              count: bool = True) -> None:
+    """THE warn-once-with-counter idiom (previously copied by the
+    quant_dot stream fallback, ``core.api._sharded_fallback``, and the
+    ops/fused_quant/rotations deprecation shims): emit ``msg`` as a
+    one-shot warning per process per ``key`` and tick
+    ``TRACE_COUNTS[key]`` on EVERY call, so the fallback/deprecation
+    stays observable after the warning goes quiet."""
+    if count:
+        TRACE_COUNTS[key] += 1
+    if key not in WARN_ONCE_SEEN:
+        WARN_ONCE_SEEN.add(key)
+        warnings.warn(msg, category, stacklevel=stacklevel)
 
 
 def _epilogue_out_bytes_per_row(n: int, in_itemsize: int, epilogue) -> int:

@@ -48,7 +48,9 @@ def build_engine(args, cfg=None):
     engine = ServeEngine(cfg, params, mesh, num_slots=args.slots,
                          max_len=args.max_len,
                          prefill_len=args.prefill_len,
-                         eos_id=args.eos_id)
+                         eos_id=args.eos_id,
+                         max_queue=getattr(args, "max_queue", None),
+                         watchdog_ms=getattr(args, "watchdog_ms", None))
     return engine, cfg
 
 
@@ -80,6 +82,16 @@ def main(argv=None):
     ap.add_argument("--eos-id", type=int, default=None)
     ap.add_argument("--mp", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bounded admission queue: submits beyond this "
+                         "depth are rejected immediately (backpressure)")
+    ap.add_argument("--deadline-slack", type=float, default=None,
+                    help="per-request TTL = arrival + max_new_tokens + "
+                         "slack steps; expired queued requests are shed, "
+                         "expired in-flight slots retired as timed_out")
+    ap.add_argument("--watchdog-ms", type=float, default=None,
+                    help="decode-step wall-clock bound; two consecutive "
+                         "trips degrade the engine one ladder rung")
     args = ap.parse_args(argv)
 
     engine, cfg = build_engine(args)
@@ -93,7 +105,8 @@ def main(argv=None):
         args.requests, vocab_size=cfg.vocab_size,
         prompt_len=(args.prompt_min, args.prompt_max or args.prefill_len),
         max_new_tokens=(args.gen_min, args.gen_max),
-        rate=args.rate, seed=args.seed)
+        rate=args.rate, seed=args.seed,
+        deadline_slack=args.deadline_slack)
     engine.run(stream)
     s = engine.summary()
     print(f"served {s['requests']:.0f} requests / "
@@ -107,6 +120,14 @@ def main(argv=None):
           f"retired={s.get('retired', 0):.0f} "
           f"prefill_inserts={s.get('prefill_inserts', 0):.0f} "
           f"queue_full_stalls={s.get('queue_full_stalls', 0):.0f}")
+    print(f"robustness: ok={s.get('status_ok', 0):.0f} "
+          f"timed_out={s.get('status_timed_out', 0):.0f} "
+          f"rejected={s.get('status_rejected', 0):.0f} "
+          f"degraded={s.get('status_degraded', 0):.0f} "
+          f"(shed={s.get('shed', 0):.0f} watchdog_trips="
+          f"{s.get('watchdog_trips', 0):.0f} degrades="
+          f"{s.get('degrades', 0):.0f} rung={s.get('rung', 0):.0f} "
+          f"guards={'on' if s.get('guards_enabled') else 'off'})")
     print(f"invariants: decode_executables={s['decode_executables']:.0f} "
           f"(constant across admissions/retirements), "
           f"quantize_weight_calls={s['quantize_weight_calls']:.0f} "

@@ -156,13 +156,33 @@ def make_prefill_step(cfg: ModelConfig):
     return prefill_step
 
 
-def make_serve_step(cfg: ModelConfig):
+def make_serve_step(cfg: ModelConfig, guard: bool = False):
+    """``guard=True`` builds the numerically-guarded form: the logits slot
+    of the return tuple is replaced by a (batch,) bool ok-vector (per-slot
+    logits finiteness; quant-scale failures arrive here too, as NaN
+    poison from ``core.guards.guard_dequant`` at the quantize sites).
+    Same arity and out-structure as the unguarded step so
+    ``jit_serve_step`` is shared; the tokens are bitwise identical
+    (guards observe, never perturb healthy values -- asserted in
+    tests/test_faults.py)."""
     def serve_step(params, caches, tokens, cache_pos):
         logits, new_caches = lm_decode_step(cfg, params, caches, tokens, cache_pos)
         new_tokens = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
         return new_tokens, logits, new_caches
 
-    return serve_step
+    if not guard:
+        return serve_step
+
+    from repro.core import guards
+
+    def guarded_serve_step(params, caches, tokens, cache_pos):
+        logits, new_caches = lm_decode_step(
+            cfg, params, caches, tokens, cache_pos)
+        ok = guards.rows_ok(logits[:, -1], tokens.shape[0])
+        new_tokens = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return new_tokens, ok, new_caches
+
+    return guarded_serve_step
 
 
 # ------------------------------------------------------- jitted assemblies
@@ -194,17 +214,19 @@ def jit_train_step(cfg, opt_cfg, shape, mesh, *, rules_overrides=None, donate=Tr
 
 
 def jit_serve_step(cfg, batch_size, cache_seq, mesh, *, rules_overrides=None,
-                   donate=True, per_slot=False):
+                   donate=True, per_slot=False, guard=False):
     """jit(serve_step). ``per_slot=True`` is the continuous-batching form:
     cache_pos is a (batch,) int32 vector (one position per request slot,
-    sharded with the slots) instead of a batch-wide scalar."""
+    sharded with the slots) instead of a batch-wide scalar. ``guard=True``
+    compiles the numerically-guarded step (middle output becomes the
+    (batch,) ok-vector; replicated, like the logits it replaces)."""
     with shd.sharding_rules(mesh, rules_overrides):
         ps = param_shardings(cfg, mesh)
         cs = cache_shardings(cfg, batch_size, cache_seq, mesh)
         tok_s = shd.make_resolver(mesh)(("batch", None), (batch_size, 1))
         pos_s = (shd.make_resolver(mesh)(("batch",), (batch_size,))
                  if per_slot else NamedSharding(mesh, P()))
-    fn = make_serve_step(cfg)
+    fn = make_serve_step(cfg, guard=guard)
 
     def wrapped(params, caches, tokens, cache_pos):
         with shd.sharding_rules(mesh, rules_overrides):

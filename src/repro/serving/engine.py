@@ -22,11 +22,41 @@ The KV cache is allocated ONCE (``serving.cache``) in the serving quant
 dtype; admissions, retirements, and slot reuse are host-side scheduler
 bookkeeping (``serving.scheduler``) plus donated in-place updates -- the
 steady-state decode step neither reallocates nor retraces (the decode
-executable count stays 1 across the whole run; see
-``decode_cache_size``). With ``cfg.weight_quant == 'int8'`` the weights
-are pre-quantized QTensors, so the serving forward performs zero
-``quantize_weight`` calls after engine construction (tracked via
-``wquant.QUANTIZE_WEIGHT_CALLS``).
+executable count stays 1 across the whole run unless the degradation
+ladder re-warms; see ``decode_cache_size``). With ``cfg.weight_quant ==
+'int8'`` the weights are pre-quantized QTensors, so the serving forward
+performs zero ``quantize_weight`` calls after engine construction
+(tracked via ``wquant.QUANTIZE_WEIGHT_CALLS``).
+
+Robustness layer (PR 8, DESIGN.md section 12):
+
+  * request lifecycle -- per-request deadlines (expired queued requests
+    shed before admission; in-flight slots past deadline retired as
+    ``timed_out``), bounded admission queue with immediate ``rejected``
+    completions (``max_queue``);
+  * decode watchdog -- ``watchdog_ms`` bounds per-step wall clock; the
+    check is post-hoc (a synchronous jit dispatch cannot be preempted),
+    so a slow step's result is still used, and two CONSECUTIVE trips
+    trigger a degradation re-warm;
+  * graceful degradation ladder -- a decode dispatch that raises is
+    retried once on intact caches (faults fire at the host boundary,
+    BEFORE the donated operands are consumed), then the engine re-warms
+    one rung down: pallas/streamed -> pallas/rotate_once -> xla. Every
+    rung is bitwise-identical by construction (asserted by the
+    quant_dot parity tests), so mid-run degradation never changes
+    emitted tokens. Rung switches tick
+    ``TRACE_COUNTS[("serving", "degrade_<rung>")]`` and warn once;
+  * numeric guardrails -- with ``REPRO_NUMERIC_GUARDS=1`` the jitted
+    steps carry isfinite/positive-scale reductions
+    (``core.guards``); a tripped slot is retired as ``degraded``
+    (reason ``nan_guard``) at the step boundary instead of emitting
+    poisoned tokens. Guard-off and guard-on runs are bitwise identical
+    on healthy requests (guards observe, never perturb).
+
+Fault injection (tests): ``repro.testing.faults`` installs a context-
+scoped ``FaultPlan`` the engine polls at each decode dispatch --
+synthetic kernel raises, artificial step latency, NaN pokes into live
+KV rows. Zero-fault overhead is one attribute load + None check.
 
 Timing discipline: ``warmup()`` pays all three compiles on dummy inputs
 before any request is admitted, so reported per-token latencies are
@@ -34,6 +64,7 @@ steady-state (the same fix applied to ``serve.py``'s timed loop).
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Dict, List, Optional, Sequence
 
@@ -41,14 +72,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import wquant
+from repro.core import guards, wquant
 from repro.distributed import sharding as shd
-from repro.kernels.registry import TRACE_COUNTS
+from repro.kernels.registry import TRACE_COUNTS, warn_once
 from repro.launch.steps import jit_serve_step
 from repro.models.config import ModelConfig
 from repro.models.lm import lm_forward
 from repro.serving.cache import alloc_kv_caches, cache_bytes, make_insert_fn
 from repro.serving.scheduler import Completion, Request, Scheduler
+from repro.testing import faults
 
 _SUPPORTED_KINDS = ("attn", "moe")
 
@@ -69,7 +101,7 @@ def _validate_config(cfg: ModelConfig) -> None:
             f"encdec={cfg.is_encdec}")
 
 
-def _make_prefill_fn(cfg: ModelConfig):
+def _make_prefill_fn(cfg: ModelConfig, guard: bool = False):
     def prefill(params, batch, length):
         logits, _, caches = lm_forward(cfg, params, batch, want_cache=True)
         # right-padded bucket: the request's last real token sits at
@@ -79,7 +111,47 @@ def _make_prefill_fn(cfg: ModelConfig):
         tok = jnp.argmax(last[:, -1], axis=-1).astype(jnp.int32)
         return tok, caches
 
-    return prefill
+    if not guard:
+        return prefill
+
+    def guarded_prefill(params, batch, length):
+        logits, _, caches = lm_forward(cfg, params, batch, want_cache=True)
+        last = jax.lax.dynamic_slice_in_dim(logits, length - 1, 1, axis=1)
+        ok = guards.rows_ok(last[:, -1], batch["tokens"].shape[0])
+        tok = jnp.argmax(last[:, -1], axis=-1).astype(jnp.int32)
+        return tok, ok, caches
+
+    return guarded_prefill
+
+
+def _degradation_ladder(cfg: ModelConfig) -> List[ModelConfig]:
+    """The rungs below ``cfg``, most-capable first. Every rung computes
+    bitwise-identical results (schedule/backend parity is asserted by the
+    quant_dot tests); each is strictly simpler machinery:
+
+        pallas + streamed  ->  pallas + rotate_once  ->  xla
+
+    A config already on 'xla' has no lower rung: a failure there
+    exhausts the ladder and fails the in-flight requests loudly."""
+    ladder = [cfg]
+    q = cfg.quant
+    if q.backend in ("pallas", "auto"):
+        if q.schedule != "rotate_once":
+            ladder.append(cfg.with_quant(
+                dataclasses.replace(q, schedule="rotate_once")))
+        ladder.append(cfg.with_quant(
+            dataclasses.replace(q, backend="xla", schedule=None)))
+    elif q.backend == "ref":
+        ladder.append(cfg.with_quant(
+            dataclasses.replace(q, backend="xla", schedule=None)))
+    return ladder
+
+
+def _rung_name(cfg: ModelConfig) -> str:
+    q = cfg.quant
+    if q.backend == "xla":
+        return "xla"
+    return q.schedule or "default"
 
 
 class ServeEngine:
@@ -91,7 +163,9 @@ class ServeEngine:
 
     def __init__(self, cfg: ModelConfig, params, mesh, *,
                  num_slots: int, max_len: int, prefill_len: int,
-                 eos_id: Optional[int] = None, rules_overrides=None):
+                 eos_id: Optional[int] = None, rules_overrides=None,
+                 max_queue: Optional[int] = None,
+                 watchdog_ms: Optional[float] = None):
         _validate_config(cfg)
         self.cfg = cfg
         self.params = params
@@ -99,22 +173,27 @@ class ServeEngine:
         self.eos_id = eos_id
         self.prefill_len = prefill_len
         self.max_len = max_len
-        self.sched = Scheduler(num_slots, max_len, prefill_len)
+        self.sched = Scheduler(num_slots, max_len, prefill_len,
+                               max_queue=max_queue)
+        self._rules_overrides = rules_overrides
+        self._guard = guards.guards_enabled()
+        self._watchdog_ms = watchdog_ms
+        self._watchdog_skip = 0       # steps exempted after a re-warm
+        self._consec_slow = 0
 
-        def in_rules(fn):
-            def wrapped(*a):
-                with shd.sharding_rules(mesh, rules_overrides):
-                    return fn(*a)
-            return wrapped
+        self._ladder = _degradation_ladder(cfg)
+        self._rung = 0
+        self._decode_jits: list = []
 
-        self._prefill = jax.jit(in_rules(_make_prefill_fn(cfg)))
-        self._insert = jax.jit(in_rules(make_insert_fn(cfg)),
+        # insert is rung-independent (a pure cache scatter: its trace
+        # never touches quant schedule or backend), so it is compiled
+        # once and shared across every rung
+        self._insert = jax.jit(self._in_rules(make_insert_fn(cfg)),
                                donate_argnums=(0,))
-        self._decode, (_, cs, _) = jit_serve_step(
-            cfg, num_slots, max_len, mesh, rules_overrides=rules_overrides,
-            donate=True, per_slot=True)
+        self._bind_rung(0)
 
         # the ONE cache allocation of the engine's lifetime
+        cs = self._decode_shardings[1]
         self.caches = jax.device_put(
             alloc_kv_caches(cfg, num_slots, max_len), cs)
         self.tokens_h = np.zeros((num_slots, 1), np.int32)
@@ -129,6 +208,27 @@ class ServeEngine:
         self._idle_steps = 0
         self._qw_calls_baseline = wquant.QUANTIZE_WEIGHT_CALLS
 
+    def _in_rules(self, fn):
+        mesh, overrides = self.mesh, self._rules_overrides
+
+        def wrapped(*a):
+            with shd.sharding_rules(mesh, overrides):
+                return fn(*a)
+        return wrapped
+
+    def _bind_rung(self, i: int) -> None:
+        """Compile-bind the jitted prefill/decode for ladder rung ``i``
+        (lazily compiled on first call, as all jax.jit wrappers are)."""
+        cfg = self._ladder[i]
+        self._rung = i
+        self._prefill = jax.jit(
+            self._in_rules(_make_prefill_fn(cfg, guard=self._guard)))
+        self._decode, self._decode_shardings = jit_serve_step(
+            cfg, self.sched.num_slots, self.max_len, self.mesh,
+            rules_overrides=self._rules_overrides,
+            donate=True, per_slot=True, guard=self._guard)
+        self._decode_jits.append(self._decode)
+
     # ---------------------------------------------------------- warm-up
     def warmup(self) -> float:
         """Compile prefill/insert/decode on dummy inputs before serving,
@@ -140,8 +240,8 @@ class ServeEngine:
             return self._compile_s
         t0 = time.perf_counter()
         batch = {"tokens": jnp.zeros((1, self.prefill_len), jnp.int32)}
-        tok, kv = self._prefill(self.params, batch,
-                                jnp.asarray(1, jnp.int32))
+        out = self._prefill(self.params, batch, jnp.asarray(1, jnp.int32))
+        kv = out[-1]
         self.caches = self._insert(self.caches, kv,
                                    jnp.asarray(0, jnp.int32))
         new_tok, _, self.caches = self._decode(
@@ -153,16 +253,83 @@ class ServeEngine:
         self._qw_calls_baseline = wquant.QUANTIZE_WEIGHT_CALLS
         return self._compile_s
 
+    # ------------------------------------------------------- degradation
+    def _degrade(self, why: str) -> bool:
+        """Re-warm one rung down the ladder; False when exhausted. The
+        new rung's prefill is compiled eagerly here (its dummy run
+        touches no engine state); the decode executable compiles on its
+        first real dispatch -- that step is exempted from the watchdog
+        so a compile is not mistaken for a hang."""
+        if self._rung + 1 >= len(self._ladder):
+            warn_once(
+                ("serving", "ladder_exhausted"),
+                f"serving degradation ladder exhausted ({why}); failing "
+                "in-flight requests (warned once per process; "
+                "TRACE_COUNTS[('serving', 'ladder_exhausted')] keeps "
+                "counting)")
+            return False
+        self._bind_rung(self._rung + 1)
+        name = _rung_name(self._ladder[self._rung])
+        self.sched.counters["degrades"] += 1
+        warn_once(
+            ("serving", f"degrade_{name}"),
+            f"serving engine degraded to rung '{name}' "
+            f"({self._rung + 1}/{len(self._ladder)}) after {why}; outputs "
+            "are bitwise-unchanged (schedule/backend parity) -- warned "
+            f"once per process; TRACE_COUNTS[('serving', 'degrade_{name}')]"
+            " keeps counting")
+        # eager prefill compile: the result is discarded, no engine
+        # state is touched (prefill donates nothing)
+        batch = {"tokens": jnp.zeros((1, self.prefill_len), jnp.int32)}
+        out = self._prefill(self.params, batch, jnp.asarray(1, jnp.int32))
+        jax.block_until_ready(out[0])
+        self._watchdog_skip = 1
+        self._consec_slow = 0
+        return True
+
+    def _fail_inflight(self, why: str) -> None:
+        """Ladder exhausted: retire every active slot as degraded and
+        drain the queue -- the engine never crashes the caller."""
+        now = float(self.step)
+        TRACE_COUNTS[("serving", "ladder_exhausted")] += 1
+        for slot in sorted(self.sched.active):
+            self.completions.append(
+                self.sched.retire(slot, "engine_failed", now))
+        queued = list(self.sched.queue)
+        self.sched.queue.clear()
+        self.sched.counters["shed"] += len(queued)
+        for req in queued:
+            self.completions.append(
+                self.sched._unadmitted_completion(req, "shed_engine_failed"))
+
     # --------------------------------------------------------- lifecycle
-    def submit(self, req: Request) -> None:
-        self.sched.submit(req)
+    def submit(self, req: Request) -> Optional[Completion]:
+        """Returns None on acceptance, or the ``rejected`` completion
+        when the bounded queue pushed back (also appended to
+        ``self.completions``)."""
+        rejected = self.sched.submit(req)
+        if rejected is not None:
+            self.completions.append(rejected)
+        return rejected
 
     def _admit(self, slot: int, req: Request) -> None:
         padded = np.zeros((1, self.prefill_len), np.int32)
         padded[0, :req.prompt_len] = req.tokens
         t0 = time.perf_counter()
-        tok, kv = self._prefill(self.params, {"tokens": jnp.asarray(padded)},
-                                jnp.asarray(req.prompt_len, jnp.int32))
+        out = self._prefill(self.params, {"tokens": jnp.asarray(padded)},
+                            jnp.asarray(req.prompt_len, jnp.int32))
+        if self._guard:
+            tok, ok, kv = out
+            if not bool(np.asarray(ok)[0]):
+                # poisoned prefill: never insert, never emit -- retire
+                # the freshly admitted slot as degraded on the spot
+                self.sched.counters["guard_trips"] += 1
+                TRACE_COUNTS[("serving", "guard_trip")] += 1
+                self.completions.append(self.sched.retire(
+                    slot, "nan_guard", float(self.step)))
+                return
+        else:
+            tok, kv = out
         self.caches = self._insert(self.caches, kv,
                                    jnp.asarray(slot, jnp.int32))
         tok_h = int(jax.block_until_ready(tok)[0])
@@ -192,6 +359,15 @@ class ServeEngine:
             self.sched.retire(slot, reason, float(self.step)))
         return True
 
+    def _retire_expired_inflight(self, now: float) -> None:
+        for slot in sorted(self.sched.active):
+            st = self.sched.active[slot]
+            if st.deadline is not None and st.deadline <= now:
+                self.sched.counters["deadline_retired"] += 1
+                TRACE_COUNTS[("serving", "deadline_retire")] += 1
+                self.completions.append(
+                    self.sched.retire(slot, "deadline", now))
+
     # -------------------------------------------------------------- run
     def run(self, requests: Sequence[Request]) -> List[Completion]:
         """Serve a whole arrival stream to completion; returns the
@@ -201,6 +377,11 @@ class ServeEngine:
             self.submit(req)
         while self.sched.has_work():
             now = float(self.step)
+            # shed queued requests whose TTL expired before a slot freed
+            self.completions.extend(self.sched.shed_expired(now))
+            # retire in-flight slots past their deadline (distinct
+            # status from a natural finish)
+            self._retire_expired_inflight(now)
             # admissions: prefill-insert every arrived request a free
             # slot can take, straight into the running decode batch
             while True:
@@ -219,19 +400,72 @@ class ServeEngine:
             self._decode_step()
         return self.completions
 
-    def _decode_step(self) -> None:
-        t0 = time.perf_counter()
-        new_tok, _, self.caches = self._decode(
+    def _dispatch_decode(self):
+        """One decode dispatch at the current rung, with fault hooks at
+        the host boundary: an injected raise fires BEFORE the jitted
+        call, so the donated caches were not consumed and a retry runs
+        on intact state."""
+        plan = faults.active()
+        if plan is not None:
+            if plan.should_poke(self.step):
+                row = int(self.positions_h[plan.nan_poke_slot]) - 1
+                if row >= 0:
+                    self.caches = faults.poke_nan(
+                        self.caches, plan.nan_poke_slot, row)
+            d = plan.delay_s(self.step)
+            if d > 0.0:
+                time.sleep(d)
+            plan.maybe_raise(self.step)
+        return self._decode(
             self.params, self.caches, jnp.asarray(self.tokens_h),
             jnp.asarray(self.positions_h))
+
+    def _decode_with_recovery(self):
+        """Dispatch; on failure retry ONCE on the same rung (transient
+        fault, caches intact), then walk the degradation ladder. None =
+        ladder exhausted."""
+        try:
+            return self._dispatch_decode()
+        except Exception as e:
+            first = e
+        self.sched.counters["step_retries"] += 1
+        TRACE_COUNTS[("serving", "step_retry")] += 1
+        try:
+            return self._dispatch_decode()
+        except Exception:
+            pass
+        while self._degrade(f"decode failure: {first!r}"):
+            try:
+                return self._dispatch_decode()
+            except Exception:
+                continue
+        return None
+
+    def _decode_step(self) -> None:
+        t0 = time.perf_counter()
+        out = self._decode_with_recovery()
+        if out is None:
+            self._fail_inflight("decode failed on every ladder rung")
+            return
+        new_tok, mid, self.caches = out
         new_tok_h = np.asarray(new_tok)           # blocks until ready
+        ok_h = np.asarray(mid) if self._guard else None
         dt_ms = (time.perf_counter() - t0) * 1e3
         self._decode_s += dt_ms * 1e-3
         self._step_latencies_ms.append(dt_ms)
         self._occupancy.append(self.sched.occupancy)
         self.step += 1
+        self._watchdog(dt_ms)
         for slot in sorted(self.sched.active):
             st = self.sched.active[slot]
+            if ok_h is not None and not bool(ok_h[slot]):
+                # numeric guard tripped this slot: retire as degraded
+                # instead of emitting a poisoned token
+                self.sched.counters["guard_trips"] += 1
+                TRACE_COUNTS[("serving", "guard_trip")] += 1
+                self.completions.append(self.sched.retire(
+                    slot, "nan_guard", float(self.step)))
+                continue
             tok = int(new_tok_h[slot, 0])
             st.generated.append(tok)
             st.latencies_ms.append(dt_ms)
@@ -240,11 +474,34 @@ class ServeEngine:
             self.positions_h[slot] = st.pos
             self._maybe_retire(slot, tok)
 
+    def _watchdog(self, dt_ms: float) -> None:
+        """Post-hoc step watchdog: a synchronous jit dispatch cannot be
+        preempted, so the bound is checked after the fact (the slow
+        step's result is still valid and used). Two CONSECUTIVE trips
+        mean sustained sickness, not a scheduling blip -> degrade."""
+        if self._watchdog_ms is None:
+            return
+        if self._watchdog_skip > 0:      # first step after a re-warm
+            self._watchdog_skip -= 1     # compiles; not a hang
+            return
+        if dt_ms <= self._watchdog_ms:
+            self._consec_slow = 0
+            return
+        self._consec_slow += 1
+        self.sched.counters["watchdog_trips"] += 1
+        TRACE_COUNTS[("serving", "watchdog_trip")] += 1
+        if self._consec_slow >= 2:
+            self._consec_slow = 0
+            self._degrade(
+                f"watchdog: 2 consecutive steps over "
+                f"{self._watchdog_ms} ms")
+
     # ------------------------------------------------------ observability
     def decode_cache_size(self) -> int:
-        """Number of compiled decode executables -- stays 1 across
-        admissions/retirements (fixed shapes, host-side scheduling)."""
-        return self._decode._cache_size()
+        """Total compiled decode executables across every rung bound so
+        far -- 1 in steady state (fixed shapes, host-side scheduling),
+        +1 per degradation re-warm and nothing else."""
+        return sum(j._cache_size() for j in self._decode_jits)
 
     def quantize_weight_calls_during_serve(self) -> int:
         """quantize_weight invocations since warmup -- 0 on the prequant
@@ -258,6 +515,9 @@ class ServeEngine:
                           for ms in c.latencies_ms[1:]] or [0.0])
         gen = sum(len(c.tokens) for c in self.completions)
         gen_decode = sum(max(len(c.tokens) - 1, 0) for c in self.completions)
+        by_status: Dict[str, int] = {}
+        for c in self.completions:
+            by_status[c.status] = by_status.get(c.status, 0) + 1
         return {
             "requests": len(self.completions),
             "generated_tokens": gen,
@@ -275,5 +535,8 @@ class ServeEngine:
             "quantize_weight_calls": self.quantize_weight_calls_during_serve(),
             "kv_cache_bytes": cache_bytes(self.cfg, self.sched.num_slots,
                                           self.max_len),
+            "rung": self._rung,
+            "guards_enabled": int(self._guard),
+            **{f"status_{k}": v for k, v in sorted(by_status.items())},
             **{k: int(v) for k, v in self.sched.counters.items()},
         }

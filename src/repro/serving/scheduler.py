@@ -4,21 +4,43 @@ Pure host-side bookkeeping -- no jax types -- so it is unit-testable
 without a device and never causes a retrace: the device only ever sees
 fixed-shape (slots,) position vectors and (slots, 1) token arrays.
 
-Lifecycle of a request (DESIGN.md section 10):
+Lifecycle of a request (DESIGN.md sections 10, 12):
 
-    submit -> [arrival queue] -> admit (free slot + arrived)
+    submit -> [bounded arrival queue | rejected]
+           -> admit (free slot + arrived + deadline not already blown;
+                     expired queued requests are SHED before admission)
            -> prefill-insert (engine) -> decode steps -> retire
-           (EOS / max-new-tokens / cache-full) -> slot back on free list
+           (EOS / max-new-tokens / cache-full / deadline / guard trip)
+           -> slot back on free list
 
 The free list gives retired slots back in LIFO order (immediate reuse --
 the hot slot's cache rows are the ones most recently touched).
 Admission is FCFS from the arrival queue; a step where the queue head
 has arrived but no slot is free counts one ``queue_full_stall``.
 
+Robustness invariants (PR 8):
+
+  * bounded admission queue: ``max_queue`` caps queued-but-unadmitted
+    requests; ``submit`` on a full queue returns a ``rejected``
+    Completion immediately (backpressure) instead of growing unbounded;
+  * per-request deadlines: ``Request.deadline`` (absolute, step units)
+    -- expired requests still in the queue are shed by
+    ``shed_expired`` without ever occupying a slot; in-flight slots
+    past deadline are retired by the engine with reason ``deadline``;
+  * monotonic clock: ``now`` values are clamped through an internal
+    high-water mark, so a backwards wall-clock jump (NTP step, clock
+    slew) can never stall admission forever -- the pre-fix failure was
+    ``queue[0].arrival_time > now`` holding for every subsequent call.
+
+Every Completion carries ``status``: 'ok' (eos/length/cache_full),
+'timed_out' (deadline / deadline_shed), 'rejected' (queue_full), or
+'degraded' (nan_guard / engine_failed / shed_engine_failed).
+
 Observability: every transition bumps
 ``kernels.registry.TRACE_COUNTS[("serving", <event>)]`` (admit / retire /
-prefill_insert / queue_full_stall) plus per-scheduler counters, so tests
-and the engine's stats report read one shared ledger.
+prefill_insert / queue_full_stall / deadline_shed / queue_reject) plus
+per-scheduler counters, so tests and the engine's stats report read one
+shared ledger.
 """
 from __future__ import annotations
 
@@ -40,6 +62,7 @@ class Request:
     tokens: np.ndarray              # (prompt_len,) int32 prompt ids
     max_new_tokens: int
     arrival_time: float = 0.0
+    deadline: Optional[float] = None  # absolute step-clock TTL; None = no TTL
 
     @property
     def prompt_len(self) -> int:
@@ -57,6 +80,21 @@ class SlotState:
     generated: List[int] = dataclasses.field(default_factory=list)
     admitted_step: int = 0
     latencies_ms: List[float] = dataclasses.field(default_factory=list)
+    deadline: Optional[float] = None
+
+
+# finish_reason -> Completion.status. Anything not listed is a bug.
+STATUS_OF_REASON = {
+    "eos": "ok",
+    "length": "ok",
+    "cache_full": "ok",
+    "deadline": "timed_out",        # in-flight slot past its TTL
+    "deadline_shed": "timed_out",   # shed from the queue, never admitted
+    "queue_full": "rejected",       # bounded-queue backpressure
+    "nan_guard": "degraded",        # numeric guard tripped the slot
+    "engine_failed": "degraded",    # step failed beyond the ladder
+    "shed_engine_failed": "degraded",  # queued when the ladder ran out
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,30 +102,49 @@ class Completion:
     rid: int
     prompt_len: int
     tokens: Tuple[int, ...]         # generated ids (first one from prefill)
-    finish_reason: str              # 'eos' | 'length' | 'cache_full'
+    finish_reason: str              # a STATUS_OF_REASON key
     admitted_step: int
     retired_step: int
     latencies_ms: Tuple[float, ...]
+    status: str = "ok"              # 'ok'|'timed_out'|'rejected'|'degraded'
 
 
 class Scheduler:
     """Slot allocator + arrival queue. The engine owns the device arrays;
     this class owns which request lives in which slot."""
 
-    def __init__(self, num_slots: int, max_len: int, prefill_len: int):
+    def __init__(self, num_slots: int, max_len: int, prefill_len: int,
+                 max_queue: Optional[int] = None):
         if prefill_len > max_len:
             raise ValueError(f"prefill_len {prefill_len} > max_len {max_len}")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue {max_queue} < 1")
         self.num_slots = num_slots
         self.max_len = max_len
         self.prefill_len = prefill_len
+        self.max_queue = max_queue
         # LIFO free list, seeded so first admissions get slots 0,1,2,...
         self.free: List[int] = list(range(num_slots))[::-1]
         self.queue: Deque[Request] = collections.deque()
         self.active: Dict[int, SlotState] = {}
         self.counters: Dict[str, int] = collections.defaultdict(int)
+        # monotonic high-water mark over every `now` this scheduler saw
+        self._clock = float("-inf")
+
+    def _mono(self, now: float) -> float:
+        """Clamp ``now`` to the scheduler's monotonic high-water mark.
+        Regression guard: a backwards wall-clock jump used to make
+        ``queue[0].arrival_time > now`` true forever, stalling admission
+        with slots free (see test_clock_jump_does_not_stall_admission)."""
+        self._clock = max(self._clock, float(now))
+        return self._clock
 
     # ------------------------------------------------------------ intake
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> Optional[Completion]:
+        """Enqueue; returns None on acceptance, or a ``rejected``
+        Completion when the bounded queue is full (backpressure -- the
+        caller gets the verdict immediately instead of queueing work
+        that cannot be served)."""
         if req.prompt_len < 1 or req.prompt_len > self.prefill_len:
             raise ValueError(
                 f"request {req.rid}: prompt_len {req.prompt_len} outside "
@@ -98,14 +155,48 @@ class Scheduler:
                 f"request {req.rid}: prompt_len + max_new_tokens "
                 f"{req.prompt_len + req.max_new_tokens} > max_len "
                 f"{self.max_len} (or max_new_tokens < 1)")
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            self.counters["rejected"] += 1
+            TRACE_COUNTS[("serving", "queue_reject")] += 1
+            return self._unadmitted_completion(req, "queue_full")
         self.queue.append(req)
         self.counters["submitted"] += 1
+        return None
+
+    def _unadmitted_completion(self, req: Request, reason: str) -> Completion:
+        now = self._clock if self._clock > float("-inf") else 0.0
+        return Completion(
+            rid=req.rid, prompt_len=req.prompt_len, tokens=(),
+            finish_reason=reason, admitted_step=-1, retired_step=int(now),
+            latencies_ms=(), status=STATUS_OF_REASON[reason])
 
     # --------------------------------------------------------- admission
+    def shed_expired(self, now: float,
+                     reason: str = "deadline_shed") -> List[Completion]:
+        """Drop every queued request whose deadline has already passed
+        (whole-queue scan: FCFS order means expired work can sit behind
+        live work). Shed requests never occupy a slot or pay a prefill."""
+        now = self._mono(now)
+        shed: List[Completion] = []
+        if not self.queue:
+            return shed
+        keep: Deque[Request] = collections.deque()
+        for req in self.queue:
+            if req.deadline is not None and req.deadline <= now:
+                self.counters["shed"] += 1
+                TRACE_COUNTS[("serving", "deadline_shed")] += 1
+                shed.append(self._unadmitted_completion(req, reason))
+            else:
+                keep.append(req)
+        self.queue = keep
+        return shed
+
     def next_admission(self, now: float) -> Optional[Tuple[int, Request]]:
         """Pop (slot, request) if the FCFS queue head has arrived and a
         slot is free; None otherwise. Counts a queue_full_stall when work
-        has arrived but every slot is occupied."""
+        has arrived but every slot is occupied. ``now`` is clamped
+        monotonic, so a backwards clock jump cannot stall admission."""
+        now = self._mono(now)
         if not self.queue or self.queue[0].arrival_time > now:
             return None
         if not self.free:
@@ -116,7 +207,8 @@ class Scheduler:
         slot = self.free.pop()
         self.active[slot] = SlotState(
             rid=req.rid, prompt_len=req.prompt_len, pos=req.prompt_len,
-            max_new_tokens=req.max_new_tokens, admitted_step=int(now))
+            max_new_tokens=req.max_new_tokens, admitted_step=int(now),
+            deadline=req.deadline)
         self.counters["admitted"] += 1
         TRACE_COUNTS[("serving", "admit")] += 1
         return slot, req
@@ -131,7 +223,8 @@ class Scheduler:
             rid=st.rid, prompt_len=st.prompt_len,
             tokens=tuple(st.generated), finish_reason=finish_reason,
             admitted_step=st.admitted_step, retired_step=int(now),
-            latencies_ms=tuple(st.latencies_ms))
+            latencies_ms=tuple(st.latencies_ms),
+            status=STATUS_OF_REASON.get(finish_reason, "degraded"))
 
     # ------------------------------------------------------------- state
     def has_work(self) -> bool:

@@ -7,7 +7,7 @@ regression tests replay the exact same traffic.
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -22,10 +22,17 @@ def synthetic_stream(
     max_new_tokens: Tuple[int, int],
     rate: float = 1.0,
     seed: int = 0,
+    deadline_slack: Optional[float] = None,
 ) -> List[Request]:
     """``rate`` is mean arrivals per decode step (lambda of the Poisson
     process); ``prompt_len`` / ``max_new_tokens`` are inclusive (lo, hi)
-    ranges. Request ids are 0..num_requests-1 in arrival order."""
+    ranges. Request ids are 0..num_requests-1 in arrival order.
+
+    ``deadline_slack`` (optional) gives every request an absolute TTL of
+    ``arrival_time + max_new_tokens + deadline_slack`` steps -- enough
+    budget to finish if admitted promptly, expiring under sustained
+    overload (the deadline-shed / timed-out paths of the hardened
+    engine)."""
     if rate <= 0:
         raise ValueError(f"rate must be positive, got {rate}")
     rng = np.random.default_rng(seed)
@@ -36,6 +43,8 @@ def synthetic_stream(
         plen = int(rng.integers(prompt_len[0], prompt_len[1] + 1))
         gen = int(rng.integers(max_new_tokens[0], max_new_tokens[1] + 1))
         toks = rng.integers(0, vocab_size, (plen,), dtype=np.int32)
+        ddl = (t + gen + deadline_slack
+               if deadline_slack is not None else None)
         out.append(Request(rid=rid, tokens=toks, max_new_tokens=gen,
-                           arrival_time=t))
+                           arrival_time=t, deadline=ddl))
     return out

@@ -1,0 +1,1 @@
+"""Test-support packages: fault injection for the serving robustness layer."""

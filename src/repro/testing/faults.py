@@ -1,0 +1,159 @@
+"""Fault-injection harness for the hardened serving engine.
+
+Chaos testing with surgical faults: every recovery path in
+``serving.engine`` (deadline shed, queue rejection, watchdog retry,
+schedule-degrade re-warm, NaN-guard retirement) is exercised by injecting
+the triggering fault at a *chosen step* of a real serve run, then
+asserting the run completes with the right per-request
+``Completion.status`` and bitwise-identical ``ok`` outputs.
+
+Faults are injected at the HOST dispatch boundary, on purpose:
+
+  * ``maybe_raise`` fires BEFORE the jitted decode call, so the donated
+    cache operand was never consumed -- the caches the engine holds are
+    intact and the retry path re-dispatches on valid state. (Raising
+    *inside* a donated jit would leave the caches in a consumed/undefined
+    state; real kernel failures surface at dispatch too -- XLA raises
+    from the blocking host call.)
+  * ``poke_nan`` writes NaN into already-written KV rows of a live slot
+    (slot axis 1, row axis 2 of every ``(repeats, slots, T, KH, hd)``
+    leaf -- see ``serving.cache.alloc_kv_caches``). Row ``pos - 1`` is
+    attended by the very next decode step, so the poison propagates to
+    that slot's logits and trips the numeric guard; the row is rewritten
+    by prefill-insert before any successor request can attend it, so the
+    fault stays request-local.
+  * ``delay_s`` sleeps on the host around the step, simulating a stuck
+    device/step for the watchdog without touching numerics.
+
+Activation is context-scoped (``with inject(plan): ...``) so a leaked
+fault can never outlive a test; the engine polls the module-level
+``active()`` accessor, keeping the zero-fault hot path one attribute
+load + None check.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+__all__ = [
+    "FaultPlan",
+    "InjectedKernelError",
+    "inject",
+    "active",
+    "poke_nan",
+    "arrival_flood",
+]
+
+
+class InjectedKernelError(RuntimeError):
+    """The synthetic kernel failure raised by ``FaultPlan.maybe_raise``."""
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """What to break, and when (all steps in engine step-clock units).
+
+    kernel_raise_at_step: raise ``InjectedKernelError`` at decode dispatch
+        of this step (None = never).
+    kernel_raise_count: how many consecutive dispatch attempts fail
+        starting at ``kernel_raise_at_step`` -- 1 exercises the
+        retry-once path; 2+ forces a degradation-ladder re-warm.
+    step_delay_s / delay_at_steps: artificial per-step host latency, at
+        the listed steps (empty = every step once step_delay_s > 0).
+        Trips the decode watchdog.
+    nan_poke_step / nan_poke_slot: before dispatching this step, write
+        NaN into the target slot's most recent KV row.
+    """
+
+    kernel_raise_at_step: Optional[int] = None
+    kernel_raise_count: int = 1
+    step_delay_s: float = 0.0
+    delay_at_steps: Tuple[int, ...] = ()
+    nan_poke_step: Optional[int] = None
+    nan_poke_slot: int = 0
+
+    # mutable bookkeeping (reset by ``inject`` on entry)
+    raises_done: int = 0
+    log: List[Tuple[int, str]] = dataclasses.field(default_factory=list)
+
+    # ---------------------------------------------------------- queries
+    def maybe_raise(self, step: int) -> None:
+        """Called by the engine immediately before decode dispatch."""
+        if (self.kernel_raise_at_step is not None
+                and step >= self.kernel_raise_at_step
+                and self.raises_done < self.kernel_raise_count):
+            self.raises_done += 1
+            self.log.append((step, "kernel_raise"))
+            raise InjectedKernelError(
+                f"injected kernel failure at step {step} "
+                f"({self.raises_done}/{self.kernel_raise_count})")
+
+    def delay_s(self, step: int) -> float:
+        if self.step_delay_s <= 0.0:
+            return 0.0
+        if self.delay_at_steps and step not in self.delay_at_steps:
+            return 0.0
+        self.log.append((step, "delay"))
+        return self.step_delay_s
+
+    def should_poke(self, step: int) -> bool:
+        if self.nan_poke_step is not None and step == self.nan_poke_step:
+            self.log.append((step, "nan_poke"))
+            return True
+        return False
+
+
+# One active plan, context-scoped. The engine reads it through
+# ``active()`` so tests never have to thread the plan into the engine.
+_ACTIVE: List[Optional[FaultPlan]] = [None]
+
+
+def active() -> Optional[FaultPlan]:
+    return _ACTIVE[0]
+
+
+@contextlib.contextmanager
+def inject(plan: FaultPlan):
+    """Scope in which the serving engine sees ``plan``. Resets the plan's
+    mutable bookkeeping on entry; always clears the slot on exit."""
+    plan.raises_done = 0
+    plan.log = []
+    prev, _ACTIVE[0] = _ACTIVE[0], plan
+    try:
+        yield plan
+    finally:
+        _ACTIVE[0] = prev
+
+
+def poke_nan(caches, slot: int, row: int):
+    """Write NaN into ``row`` of ``slot`` across every cache leaf (all
+    layers/heads). Leaves are (repeats, slots, T, KH, hd); fp8_e4m3fn and
+    bf16/f32 all represent NaN, so the write survives the cast."""
+    def one(c):
+        return c.at[:, slot, row].set(jax.numpy.nan)
+
+    return jax.tree.map(one, caches)
+
+
+def arrival_flood(num: int, *, prompt_len: int, max_new_tokens: int,
+                  arrival_time: float = 0.0,
+                  deadline: Optional[float] = None,
+                  vocab: int = 256, seed: int = 0,
+                  rid_base: int = 0) -> list:
+    """A burst of ``num`` identical-shape requests all arriving at once --
+    the overload pattern that exercises bounded-queue rejection and
+    deadline shedding together."""
+    from repro.serving.scheduler import Request
+
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(num):
+        toks = rng.integers(1, vocab, size=(prompt_len,)).astype(np.int32)
+        out.append(Request(
+            rid=rid_base + i, tokens=toks, max_new_tokens=max_new_tokens,
+            arrival_time=arrival_time, deadline=deadline))
+    return out

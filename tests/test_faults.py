@@ -1,0 +1,316 @@
+"""Hardened serving (PR 8): fault-injected recovery paths.
+
+Every recovery path gets a test that injects the triggering fault into a
+real serve run and asserts (a) the run completes without crashing,
+(b) every request carries the right ``Completion.status``, and (c) the
+``ok`` requests' token streams are bitwise identical to a fault-free
+run -- degradation and guards must never change healthy outputs.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config
+from repro.core.quant import QuantConfig
+from repro.kernels.registry import TRACE_COUNTS, WARN_ONCE_SEEN
+from repro.launch.train import scaled_config
+from repro.testing.faults import (FaultPlan, InjectedKernelError,
+                                  arrival_flood, inject)
+
+P, MAXLEN = 8, 32
+
+
+# --------------------------------------------------------------- fixtures
+def _setup(backend):
+    from repro.launch.mesh import make_local_mesh
+    from repro.launch.steps import make_param_init, param_shardings
+
+    quant = QuantConfig(mode="fp8_e4m3", rotate="hadamard", backend=backend,
+                        kv_quant=True)
+    cfg = scaled_config(get_config("llama3-8b"), 0.004).with_quant(quant)
+    cfg = dataclasses.replace(cfg, weight_quant="int8")
+    mesh = make_local_mesh(1)
+    with mesh:
+        ps = param_shardings(cfg, mesh)
+        params = jax.jit(make_param_init(cfg), out_shardings=ps)(
+            jax.random.PRNGKey(0))
+    return cfg, params, mesh
+
+
+@pytest.fixture(scope="module")
+def xla_setup():
+    return _setup("xla")
+
+
+@pytest.fixture(scope="module")
+def auto_setup():
+    """backend='auto' resolves to the XLA path on CPU but carries the
+    full degradation ladder (auto/streamed -> rotate_once -> xla), so
+    ladder re-warms are exercised at XLA speed."""
+    return _setup("auto")
+
+
+def _engine(setup, **kw):
+    from repro.serving import ServeEngine
+
+    cfg, params, mesh = setup
+    kw.setdefault("num_slots", 2)
+    kw.setdefault("max_len", MAXLEN)
+    kw.setdefault("prefill_len", P)
+    return ServeEngine(cfg, params, mesh, **kw)
+
+
+def _reqs(cfg, n, gen=4, seed=1, **kw):
+    return arrival_flood(n, prompt_len=P, max_new_tokens=gen,
+                         vocab=cfg.vocab_size, seed=seed, **kw)
+
+
+def _reference_tokens(setup, reqs):
+    """Fault-free run of the same requests (deadlines stripped):
+    rid -> token tuple."""
+    plain = [dataclasses.replace(r, deadline=None) for r in reqs]
+    comps = _engine(setup).run(plain)
+    assert all(c.status == "ok" for c in comps)
+    return {c.rid: c.tokens for c in comps}
+
+
+# ---------------------------------------------------- scheduler (host-only)
+def test_clock_jump_does_not_stall_admission():
+    """Regression: a backwards `now` used to make the arrival check fail
+    forever. The monotonic clamp admits from the high-water mark."""
+    from repro.serving.scheduler import Request, Scheduler
+
+    sched = Scheduler(num_slots=2, max_len=32, prefill_len=8)
+    sched.submit(Request(0, np.zeros(4, np.int32), 4, arrival_time=5.0))
+    assert sched.next_admission(5.0) is not None       # clock now at 5
+    sched.submit(Request(1, np.zeros(4, np.int32), 4, arrival_time=5.0))
+    # wall clock jumps BACKWARDS; pre-fix this returned None forever
+    adm = sched.next_admission(1.0)
+    assert adm is not None and adm[1].rid == 1
+    assert sched._clock == 5.0
+
+
+def test_bounded_queue_rejects_with_backpressure():
+    from repro.serving.scheduler import Request, Scheduler
+
+    sched = Scheduler(num_slots=1, max_len=32, prefill_len=8, max_queue=2)
+    before = TRACE_COUNTS[("serving", "queue_reject")]
+    assert sched.submit(Request(0, np.zeros(4, np.int32), 4)) is None
+    assert sched.submit(Request(1, np.zeros(4, np.int32), 4)) is None
+    c = sched.submit(Request(2, np.zeros(4, np.int32), 4))
+    assert c is not None and c.status == "rejected" \
+        and c.finish_reason == "queue_full" and c.tokens == ()
+    assert sched.counters["rejected"] == 1
+    assert TRACE_COUNTS[("serving", "queue_reject")] == before + 1
+    # invalid requests still raise, full queue or not
+    with pytest.raises(ValueError, match="prompt_len"):
+        sched.submit(Request(3, np.zeros(9, np.int32), 2))
+
+
+def test_shed_expired_scans_whole_queue():
+    from repro.serving.scheduler import Request, Scheduler
+
+    sched = Scheduler(num_slots=1, max_len=32, prefill_len=8)
+    sched.submit(Request(0, np.zeros(4, np.int32), 4))            # no TTL
+    sched.submit(Request(1, np.zeros(4, np.int32), 4, deadline=2.0))
+    sched.submit(Request(2, np.zeros(4, np.int32), 4, deadline=9.0))
+    shed = sched.shed_expired(5.0)
+    assert [c.rid for c in shed] == [1]
+    assert shed[0].status == "timed_out" \
+        and shed[0].finish_reason == "deadline_shed"
+    assert [r.rid for r in sched.queue] == [0, 2]   # FCFS order kept
+    assert sched.counters["shed"] == 1
+
+
+# ------------------------------------------------------------ engine paths
+def test_deadline_shed_and_inflight_timeout(xla_setup):
+    """One slot: a long request holds it; a queued request's TTL expires
+    behind it (shed, never admitted); the long request itself has a TTL
+    shorter than its generation (retired in-flight as timed_out with the
+    tokens produced so far)."""
+    cfg, _, _ = xla_setup
+    r_long, r_queued = _reqs(cfg, 2, gen=12)
+    r_long = dataclasses.replace(r_long, deadline=5.0)
+    r_queued = dataclasses.replace(r_queued, deadline=3.0)
+
+    before = TRACE_COUNTS[("serving", "deadline_shed")]
+    comps = {c.rid: c for c in _engine(
+        xla_setup, num_slots=1).run([r_long, r_queued])}
+    long_c, queued_c = comps[r_long.rid], comps[r_queued.rid]
+    assert long_c.status == "timed_out" \
+        and long_c.finish_reason == "deadline"
+    assert 0 < len(long_c.tokens) < 12      # partial output, not silence
+    assert queued_c.status == "timed_out" \
+        and queued_c.finish_reason == "deadline_shed" \
+        and queued_c.tokens == () and queued_c.admitted_step == -1
+    assert TRACE_COUNTS[("serving", "deadline_shed")] == before + 1
+
+
+def test_kernel_raise_retried_once_bitwise(xla_setup):
+    """A transient decode failure is retried on intact caches (the fault
+    fires before the donated dispatch): same tokens, same single decode
+    executable, status ok."""
+    cfg, _, _ = xla_setup
+    reqs = _reqs(cfg, 2, gen=5)
+    ref = _reference_tokens(xla_setup, reqs)
+
+    eng = _engine(xla_setup)
+    with inject(FaultPlan(kernel_raise_at_step=1, kernel_raise_count=1)):
+        comps = eng.run(reqs)
+    s = eng.summary()
+    assert all(c.status == "ok" for c in comps)
+    assert all(c.tokens == ref[c.rid] for c in comps)
+    assert s["step_retries"] == 1
+    assert s["decode_executables"] == 1 and s.get("degrades", 0) == 0
+
+
+def test_persistent_failure_degrades_and_rewarm_bitwise(auto_setup):
+    """Two consecutive dispatch failures exhaust the retry and re-warm
+    one ladder rung down (schedule pinned to rotate_once). The re-warmed
+    engine finishes the stream with BITWISE-identical tokens, and the
+    decode executable count grows by exactly the re-warm."""
+    cfg, _, _ = auto_setup
+    reqs = _reqs(cfg, 2, gen=5)
+    ref = _reference_tokens(auto_setup, reqs)
+
+    WARN_ONCE_SEEN.discard(("serving", "degrade_rotate_once"))
+    before = TRACE_COUNTS[("serving", "degrade_rotate_once")]
+    eng = _engine(auto_setup)
+    with pytest.warns(RuntimeWarning, match="degraded to rung"), \
+            inject(FaultPlan(kernel_raise_at_step=1, kernel_raise_count=2)):
+        comps = eng.run(reqs)
+    s = eng.summary()
+    assert all(c.status == "ok" for c in comps)
+    assert all(c.tokens == ref[c.rid] for c in comps)
+    assert s["rung"] == 1 and s["degrades"] == 1
+    assert s["decode_executables"] == 2     # exactly one re-warm
+    assert TRACE_COUNTS[("serving", "degrade_rotate_once")] == before + 1
+
+
+def test_ladder_exhaustion_fails_loudly_not_crashily(xla_setup):
+    """On a single-rung (xla) config a persistent failure cannot degrade:
+    in-flight requests retire as ``degraded``/engine_failed and queued
+    work is drained -- the caller never sees the raise."""
+    cfg, _, _ = xla_setup
+    reqs = _reqs(cfg, 3, gen=5)
+    WARN_ONCE_SEEN.discard(("serving", "ladder_exhausted"))
+    eng = _engine(xla_setup, num_slots=2)
+    with pytest.warns(RuntimeWarning, match="ladder exhausted"), \
+            inject(FaultPlan(kernel_raise_at_step=1, kernel_raise_count=99)):
+        comps = {c.rid: c for c in eng.run(reqs)}
+    assert all(c.status == "degraded" for c in comps.values())
+    inflight = [c for c in comps.values()
+                if c.finish_reason == "engine_failed"]
+    drained = [c for c in comps.values()
+               if c.finish_reason == "shed_engine_failed"]
+    assert len(inflight) == 2 and len(drained) == 1
+
+
+def test_watchdog_trips_on_slow_steps(xla_setup):
+    """Artificial step latency trips the post-hoc watchdog twice in a
+    row; the slow steps' results are still used (tokens unchanged) and
+    on a single-rung config the degrade attempt is a warn, not a crash."""
+    cfg, _, _ = xla_setup
+    reqs = _reqs(cfg, 2, gen=5)
+    ref = _reference_tokens(xla_setup, reqs)
+
+    before = TRACE_COUNTS[("serving", "watchdog_trip")]
+    WARN_ONCE_SEEN.discard(("serving", "ladder_exhausted"))
+    eng = _engine(xla_setup, watchdog_ms=40.0)
+    with pytest.warns(RuntimeWarning, match="ladder exhausted"), \
+            inject(FaultPlan(step_delay_s=0.1, delay_at_steps=(1, 2))):
+        comps = eng.run(reqs)
+    s = eng.summary()
+    assert all(c.status == "ok" for c in comps)
+    assert all(c.tokens == ref[c.rid] for c in comps)
+    assert s["watchdog_trips"] >= 2
+    assert TRACE_COUNTS[("serving", "watchdog_trip")] >= before + 2
+
+
+# --------------------------------------------------------- numeric guards
+def test_nan_poke_retires_only_the_poisoned_slot(xla_setup, monkeypatch):
+    """NaN injected into a live slot's KV row trips the logits guard at
+    the next step: that slot retires as ``degraded`` (no poisoned tokens
+    emitted); the co-resident slot finishes bitwise clean."""
+    monkeypatch.setenv("REPRO_NUMERIC_GUARDS", "1")
+    cfg, _, _ = xla_setup
+    reqs = _reqs(cfg, 2, gen=6)
+    ref = _reference_tokens(xla_setup, reqs)  # guard-off engine
+
+    before = TRACE_COUNTS[("serving", "guard_trip")]
+    eng = _engine(xla_setup)
+    with inject(FaultPlan(nan_poke_step=2, nan_poke_slot=0)):
+        comps = {c.rid: c for c in eng.run(reqs)}
+    poisoned = comps[reqs[0].rid]             # slot 0 = first admission
+    clean = comps[reqs[1].rid]
+    assert poisoned.status == "degraded" \
+        and poisoned.finish_reason == "nan_guard"
+    assert len(poisoned.tokens) < 6           # cut short, not completed
+    # the emitted prefix (pre-poke) is still the correct stream prefix
+    assert poisoned.tokens == ref[poisoned.rid][:len(poisoned.tokens)]
+    assert clean.status == "ok" and clean.tokens == ref[clean.rid]
+    assert TRACE_COUNTS[("serving", "guard_trip")] >= before + 1
+    assert eng.summary()["guards_enabled"] == 1
+
+
+def test_guards_on_is_bitwise_guard_off(xla_setup, monkeypatch):
+    """No-fault run with guards enabled: identical tokens, all ok --
+    guards observe, never perturb."""
+    cfg, _, _ = xla_setup
+    reqs = _reqs(cfg, 3, gen=5)
+    ref = _reference_tokens(xla_setup, reqs)  # guards off
+
+    monkeypatch.setenv("REPRO_NUMERIC_GUARDS", "1")
+    comps = _engine(xla_setup).run(reqs)
+    assert all(c.status == "ok" for c in comps)
+    assert all(c.tokens == ref[c.rid] for c in comps)
+
+
+# ------------------------------------------------------ combined acceptance
+def test_combined_chaos_run(auto_setup, monkeypatch):
+    """The ISSUE's acceptance scenario in one run: guards on, kernel
+    raise at step N forcing a ladder re-warm, a deadline-expired queued
+    request, and queue overflow -- completes without crashing, statuses
+    correct per request, ok outputs bitwise vs fault-free, decode
+    executables grow only by the re-warm."""
+    monkeypatch.setenv("REPRO_NUMERIC_GUARDS", "1")
+    cfg, _, _ = auto_setup
+    r = _reqs(cfg, 6, gen=4)
+    r[0] = dataclasses.replace(r[0], max_new_tokens=6)
+    r[2] = dataclasses.replace(r[2], deadline=2.0)   # expires queued
+    ok_rids = {r[0].rid, r[1].rid, r[3].rid}
+    ref = _reference_tokens(auto_setup, [r[0], r[1], r[3]])
+
+    eng = _engine(auto_setup, max_queue=4)
+    with inject(FaultPlan(kernel_raise_at_step=1, kernel_raise_count=2)):
+        comps = {c.rid: c for c in eng.run(r)}
+    s = eng.summary()
+
+    assert len(comps) == 6
+    for rid in ok_rids:
+        assert comps[rid].status == "ok"
+        assert comps[rid].tokens == ref[rid]
+    assert comps[r[2].rid].status == "timed_out" \
+        and comps[r[2].rid].finish_reason == "deadline_shed"
+    assert comps[r[4].rid].status == "rejected"
+    assert comps[r[5].rid].status == "rejected"
+    assert s["decode_executables"] == 2 and s["rung"] == 1
+    assert s["status_ok"] == 3 and s["status_rejected"] == 2 \
+        and s["status_timed_out"] == 1
+    assert s.get("guard_trips", 0) == 0     # healthy numerics, no trips
+
+
+def test_fault_plan_is_context_scoped():
+    from repro.testing import faults
+
+    plan = FaultPlan(kernel_raise_at_step=0)
+    assert faults.active() is None
+    with inject(plan):
+        assert faults.active() is plan
+        with pytest.raises(InjectedKernelError):
+            plan.maybe_raise(0)
+    assert faults.active() is None
+    assert plan.log == [(0, "kernel_raise")]

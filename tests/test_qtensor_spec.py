@@ -241,15 +241,17 @@ def test_rotation_shims_warn_once_and_delegate():
         "online_hadamard_quantize":
             lambda: rotations.online_hadamard_quantize(x, cfg),
     }
+    from repro.kernels.registry import WARN_ONCE_SEEN
+
     for name, call in calls.items():
-        rotations._warned.discard(name)
+        WARN_ONCE_SEEN.discard(("deprecated", name))
         with pytest.warns(DeprecationWarning, match=name):
             call()
         with warnings.catch_warnings():
             warnings.simplefilter("error")  # second call must stay silent
             call()
     # ... and the shim output is the spec API's output
-    rotations._warned.add("rotated_quant_dot")
+    WARN_ONCE_SEEN.add(("deprecated", "rotated_quant_dot"))
     a = rotations.rotated_quant_dot(x, w, cfg)
     b = QuantDotSpec.for_config(256, cfg).bind(w)(x)
     assert (np.asarray(a) == np.asarray(b)).all()
@@ -267,7 +269,9 @@ def test_bind_accepts_legacy_weight_tuple():
     want = spec.bind(qt)(x)
     assert (np.asarray(spec.bind((qt.q, qt.scale))(x))
             == np.asarray(want)).all()
-    rotations._warned.add("rotated_quant_dot")
+    from repro.kernels.registry import WARN_ONCE_SEEN
+
+    WARN_ONCE_SEEN.add(("deprecated", "rotated_quant_dot"))
     assert (np.asarray(rotations.rotated_quant_dot(x, (qt.q, qt.scale), cfg))
             == np.asarray(want)).all()
     with pytest.raises(ValueError, match="storage dtype"):

@@ -683,7 +683,7 @@ def test_streamed_interpret_fallback_warns_once_and_counts(monkeypatch):
     import repro.kernels.quant_dot as qd
 
     monkeypatch.delenv(qd.STREAM_INTERPRET_ENV, raising=False)
-    monkeypatch.setattr(qd, "_STREAM_FALLBACK_WARNED", [False])
+    registry.WARN_ONCE_SEEN.discard(("quant_dot", "stream_fallback"))
     x = _x((4, 256), seed=54)
     wq, sw = quantize_weight(_x((256, 64), seed=55) * 0.1, "int8")
     plan = plan_for(256, backend="pallas", epilogue=QuantEpilogue("int8"))
@@ -808,9 +808,12 @@ def test_deprecation_shims_warn_once():
         (fused_quant,
          lambda: fused_quant.fused_hadamard_quantize(_x((2, 128)))),
     ):
-        mod._warned = False
+        registry.WARN_ONCE_SEEN.discard(mod.WARN_KEY)
+        before = registry.TRACE_COUNTS[mod.WARN_KEY]
         with pytest.warns(DeprecationWarning):
             call()
         with warnings.catch_warnings():
             warnings.simplefilter("error")  # second call must stay silent
             call()
+        # the shared warn_once util keeps counting after going quiet
+        assert registry.TRACE_COUNTS[mod.WARN_KEY] == before + 2

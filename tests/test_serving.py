@@ -309,4 +309,12 @@ def test_bench_serve_loop_smoke():
                <= set(r) for r in records)
     assert all(r["ms"] > 0 for r in records)
     modes = {r["bench"] for r in records}
-    assert modes == {"serve_loop_none", "serve_loop_int8"}
+    assert modes == {"serve_loop_none", "serve_loop_int8",
+                     "serve_loop_overload"}
+    # the overload flood must actually overload: every disposition class
+    # is recorded, and load was genuinely shed/rejected
+    ov = next(r for r in records if r["bench"] == "serve_loop_overload")
+    assert {"ok", "timed_out", "rejected", "degraded", "shed",
+            "p99_ms"} <= set(ov)
+    assert ov["rejected"] > 0 and ov["timed_out"] > 0
+    assert ov["ok"] + ov["timed_out"] + ov["rejected"] + ov["degraded"] == 10
