@@ -1,0 +1,26 @@
+"""Static analysis of the repo's kernel contracts (PR 9).
+
+One declarative subsystem for every structural invariant the perf work
+depends on: jaxpr walkers (shared with the test suites), a decorator-
+registered rule registry, traced lint sites, a mutation fixture, and
+the ``python -m repro.analysis.lint`` CLI. See DESIGN.md section 13.
+"""
+from repro.analysis.jaxpr_utils import (as_jaxpr, count_pallas_calls,
+                                        count_primitive, dots_by_region,
+                                        dots_outside_pallas, iter_eqns,
+                                        kernel_jaxpr, kernel_jaxprs,
+                                        pallas_call_eqns, stream_events)
+from repro.analysis.report import Report, Violation
+from repro.analysis.rules import (Rule, all_rules, register_rule,
+                                  run_rules)
+from repro.analysis.sites import (Site, default_sites, kernel_sites,
+                                  model_sites, serving_sites)
+
+__all__ = [
+    "Report", "Rule", "Site", "Violation",
+    "all_rules", "as_jaxpr", "count_pallas_calls", "count_primitive",
+    "default_sites", "dots_by_region", "dots_outside_pallas",
+    "iter_eqns", "kernel_jaxpr", "kernel_jaxprs", "kernel_sites",
+    "model_sites", "pallas_call_eqns", "register_rule", "run_rules",
+    "serving_sites", "stream_events",
+]

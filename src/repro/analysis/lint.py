@@ -1,0 +1,121 @@
+"""Kernel contract lint CLI.
+
+    PYTHONPATH=src python -m repro.analysis.lint \\
+        --config llama3_8b --config mixtral_8x7b \\
+        --schedule rotate_once --schedule streamed --json report.json
+
+Traces the model sites of each named config from ``src/repro/configs/``
+(the fused 2-D/3-D quant_dot dispatches, the bound-spec MLP forward,
+and the serving decode/insert executables), runs every registered rule,
+and exits nonzero on any violation. ``--mutation`` lints the committed
+broken-kernel fixtures instead; since those are intentionally broken, a
+healthy linter exits nonzero there -- the CI leg inverts that gate to
+prove the rules have teeth.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+__all__ = ["main"]
+
+
+def _build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="Static kernel-contract linter over traced jaxprs "
+                    "and compiled HLO.")
+    ap.add_argument("--config", action="append", default=None,
+                    help="config name from repro.configs (repeatable; "
+                    "default: llama3_8b)")
+    ap.add_argument("--schedule", action="append", default=None,
+                    choices=["rotate_once", "streamed"],
+                    help="quant_dot grid schedule(s) to lint "
+                    "(repeatable; default: rotate_once)")
+    ap.add_argument("--rule", action="append", default=None,
+                    help="run only the named rule(s) (default: all)")
+    ap.add_argument("--no-serving", action="store_true",
+                    help="skip the serving-engine sites (faster; no "
+                    "donation/decode checks)")
+    ap.add_argument("--mutation", action="store_true",
+                    help="lint the committed broken-kernel fixtures "
+                    "instead of the model sites; a healthy linter exits "
+                    "nonzero (both mutants flagged)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the report as JSON ('-' for stdout)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print registered rules and exit")
+    return ap
+
+
+def _emit(report, path: Optional[str]) -> None:
+    if not path:
+        return
+    text = report.to_json()
+    if path == "-":
+        print(text)
+    else:
+        with open(path, "w") as f:
+            f.write(text + "\n")
+
+
+def _lint_mutants(args) -> int:
+    from repro.analysis.mutations import mutant_sites
+    from repro.analysis.rules import run_rules
+
+    sites = mutant_sites()
+    report = run_rules(sites, rules=args.rule)
+    print(report.format_text())
+    _emit(report, args.json)
+    flagged = {v.site for v in report.violations}
+    missed = [s.name for s in sites if s.name not in flagged]
+    if missed:
+        print(f"WARNING: mutant(s) passed the lint: {missed} -- the "
+              "rules lost their teeth (CI inverts this gate and fails)",
+              file=sys.stderr)
+    # plain lint semantics: the fixtures are broken kernels, so a
+    # healthy linter exits NONZERO here; CI asserts that, plus that
+    # every mutant name appears in the JSON violations
+    return 1 if report.violations else 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = _build_parser().parse_args(argv)
+
+    from repro.analysis.rules import all_rules, run_rules
+
+    if args.list_rules:
+        for name, rule in all_rules().items():
+            doc = (rule.__doc__ or "").strip().split("\n")[0]
+            print(f"{name:26s} {doc}")
+        return 0
+    if args.rule:
+        unknown = [r for r in args.rule if r not in all_rules()]
+        if unknown:
+            print(f"unknown rule(s): {unknown}; --list-rules to see "
+                  "what's registered", file=sys.stderr)
+            return 2
+    if args.mutation:
+        return _lint_mutants(args)
+
+    from repro.analysis.sites import default_sites
+
+    configs = args.config or ["llama3_8b"]
+    schedules = args.schedule or ["rotate_once"]
+    report = None
+    for config in configs:
+        for i, schedule in enumerate(schedules):
+            # serving sites are schedule-independent (the engine's own
+            # ladder owns its schedule); trace them once per config
+            part = run_rules(default_sites(
+                config, schedule, serving=not args.no_serving and i == 0),
+                rules=args.rule)
+            report = part if report is None else report.merge(part)
+    print(report.format_text())
+    _emit(report, args.json)
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -326,6 +326,45 @@ def _comp_cost(comps: Dict[str, Computation], name: str,
     return cost
 
 
+_ALIAS_PAIR_RE = re.compile(
+    r"\{\s*([\d,\s]*)\}\s*:\s*\(\s*(\d+)\s*,\s*\{\s*([\d,\s]*)\}")
+
+
+def parse_input_output_aliases(text: str) -> List[Tuple[Tuple[int, ...],
+                                                        int,
+                                                        Tuple[int, ...]]]:
+    """The donation aliasing pairs from the HloModule header:
+    ``input_output_alias={ {0}: (1, {0}, may-alias), ... }`` ->
+    ``[(out_index, param_number, param_index), ...]``.
+
+    An executable compiled with ``donate_argnums`` that actually reuses
+    the donated buffers carries one pair per donated leaf; an empty list
+    means the donation was dropped (every step would allocate fresh
+    output buffers). Note XLA prunes unused parameters, so
+    ``param_number`` need not equal the Python-level argnum."""
+    start = text.find("input_output_alias={")
+    if start < 0:
+        return []
+    # the attribute value nests braces ({0}: (...), ...) -- scan to the
+    # balancing close instead of regexing for the first '}'
+    i = text.index("{", start)
+    depth = 0
+    for j in range(i, len(text)):
+        if text[j] == "{":
+            depth += 1
+        elif text[j] == "}":
+            depth -= 1
+            if depth == 0:
+                break
+    body = text[i + 1:j]
+
+    def _idx(s: str) -> Tuple[int, ...]:
+        return tuple(int(d) for d in s.replace(" ", "").split(",") if d)
+
+    return [(_idx(om), int(pn), _idx(pi))
+            for om, pn, pi in _ALIAS_PAIR_RE.findall(body)]
+
+
 def analyze_hlo(text: str) -> Dict[str, object]:
     """Per-DEVICE trip-corrected flops / hbm bytes / collective wire bytes."""
     comps = parse_hlo(text)

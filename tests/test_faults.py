@@ -190,6 +190,32 @@ def test_persistent_failure_degrades_and_rewarm_bitwise(auto_setup):
     assert TRACE_COUNTS[("serving", "degrade_rotate_once")] == before + 1
 
 
+def test_rewarmed_executable_still_passes_lint(auto_setup):
+    """PR 9 linter x PR 8 ladder: after a persistent failure re-warms
+    the engine one rung down, the RE-WARMED decode/insert executables
+    still satisfy the fusion and donation contracts -- degradation must
+    never trade away cache donation or reintroduce per-step weight
+    quantization."""
+    from repro.analysis import run_rules, serving_sites
+
+    cfg, _, _ = auto_setup
+    reqs = _reqs(cfg, 2, gen=5)
+    eng = _engine(auto_setup)
+    WARN_ONCE_SEEN.discard(("serving", "degrade_rotate_once"))
+    with pytest.warns(RuntimeWarning, match="degraded to rung"), \
+            inject(FaultPlan(kernel_raise_at_step=1, kernel_raise_count=2)):
+        comps = eng.run(reqs)
+    assert eng.summary()["rung"] == 1    # genuinely re-warmed
+    assert all(c.status == "ok" for c in comps)
+
+    sites = serving_sites(cfg.name, engine=eng)
+    assert any("rung1" in s.name for s in sites)
+    rep = run_rules(sites, rules=["fusion-contract", "donation"])
+    ran = {r for _, r in rep.checked}
+    assert {"fusion-contract", "donation"} <= ran
+    assert rep.ok, rep.format_text()
+
+
 def test_ladder_exhaustion_fails_loudly_not_crashily(xla_setup):
     """On a single-rung (xla) config a persistent failure cannot degrade:
     in-flight requests retire as ``degraded``/engine_failed and queued

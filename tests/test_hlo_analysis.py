@@ -3,10 +3,13 @@ import numpy as np
 import pytest
 
 from repro.launch.hlo_analysis import (
+    Instr,
     _shape_bytes,
     _split_operands,
+    _trip_count_from_config,
     analyze_hlo,
     parse_hlo,
+    parse_input_output_aliases,
 )
 
 
@@ -18,6 +21,96 @@ def test_shape_bytes():
     assert _shape_bytes("f8e4m3fn[100]") == 100
     # tuple with /*index=N*/ comments (real XLA print format)
     assert _shape_bytes("(s32[], f32[2,2], /*index=2*/bf16[4])") == 4 + 16 + 8
+
+
+def test_shape_bytes_sub_byte_and_fp8_dtypes():
+    # every fp8 spelling XLA prints is 1 byte/element
+    for dt in ("f8e4m3fn", "f8e5m2", "f8e4m3", "f8e5m2fnuz", "f8e4m3fnuz"):
+        assert _shape_bytes(f"{dt}[16,32]") == 16 * 32
+    # int4 weights pack two to a byte
+    assert _shape_bytes("s4[128,256]{1,0}") == 128 * 256 / 2
+    assert _shape_bytes("u4[64]") == 32
+    assert _shape_bytes("(s4[8], f8e4m3fn[8], f32[8])") == 4 + 8 + 32
+    # unknown dtypes are skipped, not mis-billed
+    assert _shape_bytes("token[]") == 0
+
+
+def test_trip_count_from_backend_config():
+    """XLA records statically-known trip counts on the while instruction
+    itself; the analyzer must prefer that over cond-constant recovery."""
+    line = ('  %w = (s32[], f32[4]) while(%t0), condition=%c, body=%b, '
+            'backend_config={"known_trip_count":{"n":"6"}}')
+    ins = Instr("w", "(s32[], f32[4])", "while", ["t0"], "", line)
+    assert _trip_count_from_config(ins) == 6
+    plain = Instr("w", "(s32[], f32[4])", "while", ["t0"], "",
+                  "  %w = (s32[], f32[4]) while(%t0), condition=%c")
+    assert _trip_count_from_config(plain) is None
+
+
+def _coll_hlo(op_line: str) -> str:
+    return f"""HloModule coll, entry_computation_layout={{()->f32[]}}
+
+%sum (a: f32[], b: f32[]) -> f32[] {{
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}}
+
+ENTRY %main (p: f32[64,64]) -> f32[] {{
+  %p = f32[64,64] parameter(0)
+{op_line}
+  %z = f32[] constant(0)
+  ROOT %s = f32[] reduce(%o, %z), dimensions={{0,1}}, to_apply=%sum
+}}
+"""
+
+
+@pytest.mark.parametrize("op,out_shape,wire", [
+    # ring models over a 4-member group, f32[64,64] = 16384 B
+    ("all-reduce", "f32[64,64]", 2 * 16384 * 3 / 4),
+    ("all-gather", "f32[64,64]", 16384 * 3 / 4),
+    ("reduce-scatter", "f32[16,64]", 16384 * 3 / 4),   # in_size-based
+    ("all-to-all", "f32[64,64]", 16384 * 3 / 4),
+    ("collective-permute", "f32[64,64]", 16384.0),     # no ring factor
+])
+def test_collective_ring_cost_models(op, out_shape, wire):
+    attrs = "replica_groups={{0,1,2,3}}"
+    if op == "all-reduce":
+        attrs += ", to_apply=%sum"
+    line = f"  %o = {out_shape} {op}(%p), {attrs}"
+    res = analyze_hlo(_coll_hlo(line))
+    assert res["collective_counts"] == {op: 1}
+    assert res["collective_wire_bytes_per_device"][op] == pytest.approx(wire)
+
+
+def test_replica_group_size_bare_and_iota_forms():
+    # replica_groups=[2,4] (iota shorthand: 2 groups of 4)
+    line = ("  %o = f32[64,64] all-gather(%p), replica_groups=[2,4]<=[8], "
+            "dimensions={0}")
+    res = analyze_hlo(_coll_hlo(line))
+    assert res["collective_wire_bytes_per_device"]["all-gather"] == \
+        pytest.approx(16384 * 3 / 4)
+
+
+def test_parse_input_output_aliases():
+    hdr = ("HloModule jit_step, input_output_alias={ {0}: (1, {0}, "
+           "may-alias), {1}: (1, {1}, may-alias), {2,0}: (3, {}, "
+           "must-alias) }, entry_computation_layout={(f32[2])->f32[2]}")
+    assert parse_input_output_aliases(hdr) == [
+        ((0,), 1, (0,)), ((1,), 1, (1,)), ((2, 0), 3, ())]
+    assert parse_input_output_aliases("HloModule nodonation") == []
+
+
+def test_donated_jit_shows_aliases_in_compiled_hlo():
+    """End-to-end: a donate_argnums jit on CPU really carries
+    input_output_alias pairs the donation rule can count."""
+    import jax
+    import jax.numpy as jnp
+
+    f = jax.jit(lambda c, x: (c + x, x.sum()), donate_argnums=(0,))
+    text = f.lower(jnp.zeros((8, 8)), jnp.ones((8, 8))).compile().as_text()
+    aliases = parse_input_output_aliases(text)
+    assert len(aliases) == 1
 
 
 def test_split_operands():

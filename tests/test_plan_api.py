@@ -241,28 +241,8 @@ def test_model_helper_vjp_flows():
 
 
 # ----------------------------------------------------- end-to-end model
-def _count_pallas_calls(jaxpr) -> int:
-    from jax.core import ClosedJaxpr, Jaxpr
-
-    def walk(v):
-        if isinstance(v, ClosedJaxpr):
-            return count(v.jaxpr)
-        if isinstance(v, Jaxpr):
-            return count(v)
-        if isinstance(v, (list, tuple)):
-            return sum(walk(u) for u in v)
-        return 0
-
-    def count(j):
-        total = 0
-        for eqn in j.eqns:
-            if eqn.primitive.name == "pallas_call":
-                total += 1
-            for param in eqn.params.values():
-                total += walk(param)
-        return total
-
-    return count(jaxpr)
+# shared with the lint rules: tests and CI assert one implementation
+from repro.analysis import count_pallas_calls as _count_pallas_calls
 
 
 def test_model_down_proj_routes_through_single_fused_kernel():

@@ -149,28 +149,9 @@ def test_qd_fusability_vmem_budget_guard():
 
 
 # ---------------------------------------------------- single-kernel HLO
-def _count_pallas_calls(jaxpr) -> int:
-    from jax.core import ClosedJaxpr, Jaxpr
-
-    def walk(v):
-        if isinstance(v, ClosedJaxpr):
-            return count(v.jaxpr)
-        if isinstance(v, Jaxpr):
-            return count(v)
-        if isinstance(v, (list, tuple)):
-            return sum(walk(u) for u in v)
-        return 0
-
-    def count(j):
-        total = 0
-        for eqn in j.eqns:
-            if eqn.primitive.name == "pallas_call":
-                total += 1
-            for param in eqn.params.values():
-                total += walk(param)
-        return total
-
-    return count(jaxpr)
+# the structural walkers live in repro.analysis (shared with the lint
+# rules); the tests assert through the same implementation CI lints with
+from repro.analysis import count_pallas_calls as _count_pallas_calls
 
 
 def test_rotated_quant_dot_lowers_to_single_pallas_call():
@@ -317,50 +298,8 @@ def test_rotated_quant_dot_experts_matches_per_expert_quant_dot():
 
 
 # -------------------------------------------- rotate-once grid schedule
-def _kernel_jaxpr(closed):
-    """The kernel jaxpr of the single pallas_call inside ``closed``."""
-    from jax.core import ClosedJaxpr, Jaxpr
-
-    found = []
-
-    def walk(v):
-        if isinstance(v, ClosedJaxpr):
-            scan(v.jaxpr)
-        elif isinstance(v, Jaxpr):
-            scan(v)
-        elif isinstance(v, (list, tuple)):
-            for u in v:
-                walk(u)
-
-    def scan(j):
-        for eqn in j.eqns:
-            if eqn.primitive.name == "pallas_call":
-                found.append(eqn.params["jaxpr"])
-            else:
-                for param in eqn.params.values():
-                    walk(param)
-
-    scan(closed.jaxpr)
-    assert len(found) == 1, f"expected exactly one pallas_call, got {found}"
-    return found[0]
-
-
-def _dots_by_region(kjaxpr):
-    """(top-level dot_general count, dot_general count inside cond
-    branches) of a kernel jaxpr -- the structural signature of the
-    rotate-once schedule: the transform's pass matmuls live under the
-    ``j == 0`` cond, the contraction outside it."""
-    from jax.core import ClosedJaxpr
-
-    top = sum(1 for e in kjaxpr.eqns if e.primitive.name == "dot_general")
-    in_cond = 0
-    for e in kjaxpr.eqns:
-        if e.primitive.name == "cond":
-            for br in e.params["branches"]:
-                j = br.jaxpr if isinstance(br, ClosedJaxpr) else br
-                in_cond += sum(1 for q in j.eqns
-                               if q.primitive.name == "dot_general")
-    return top, in_cond
+from repro.analysis import dots_by_region as _dots_by_region
+from repro.analysis import kernel_jaxpr as _kernel_jaxpr
 
 
 @pytest.mark.parametrize("d", [256, 1024])
@@ -464,33 +403,7 @@ def test_quant_dot_pinned_block_m_end_to_end():
 
 
 # ------------------------------------------- fused 3-D expert kernel
-def _dots_outside_pallas(closed) -> int:
-    """dot_general count anywhere in the jaxpr EXCEPT inside pallas_call
-    kernel bodies -- nonzero means contraction work escaped the fused
-    kernel (e.g. the einsum fallback ran)."""
-    from jax.core import ClosedJaxpr, Jaxpr
-
-    def walk(v):
-        if isinstance(v, ClosedJaxpr):
-            return count(v.jaxpr)
-        if isinstance(v, Jaxpr):
-            return count(v)
-        if isinstance(v, (list, tuple)):
-            return sum(walk(u) for u in v)
-        return 0
-
-    def count(j):
-        total = 0
-        for eqn in j.eqns:
-            if eqn.primitive.name == "pallas_call":
-                continue  # kernel-internal dots don't count
-            if eqn.primitive.name == "dot_general":
-                total += 1
-            for param in eqn.params.values():
-                total += walk(param)
-        return total
-
-    return count(closed.jaxpr)
+from repro.analysis import dots_outside_pallas as _dots_outside_pallas
 
 
 def test_quant_dot_experts_fused_single_kernel():
@@ -554,27 +467,7 @@ def test_quant_dot_experts_einsum_under_mesh():
 
 
 # ------------------------------------- streamed DMA-ring grid schedule
-def _stream_events(kjaxpr):
-    """Ordered top-level event list of a streamed kernel jaxpr:
-    ``start_cond`` (a cond whose branch issues an async-copy start --
-    the warm-up at j == 0 or the j+1 prefetch), ``wait`` (a top-level
-    dma_wait), ``dot`` (a top-level dot_general, the contraction)."""
-    from jax.core import ClosedJaxpr
-
-    def _has_dma_start(br):
-        j = br.jaxpr if isinstance(br, ClosedJaxpr) else br
-        return any(q.primitive.name == "dma_start" for q in j.eqns)
-
-    events = []
-    for e in kjaxpr.eqns:
-        if e.primitive.name == "cond" and any(
-                _has_dma_start(br) for br in e.params["branches"]):
-            events.append("start_cond")
-        elif e.primitive.name == "dma_wait":
-            events.append("wait")
-        elif e.primitive.name == "dot_general":
-            events.append("dot")
-    return events
+from repro.analysis import stream_events as _stream_events
 
 
 def _streamed_jaxpr(d=640, bn=128, experts=False):
