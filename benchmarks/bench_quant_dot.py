@@ -19,8 +19,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import verify
 from repro.core.api import QuantEpilogue, hadamard, plan_for, quant_dot
-from repro.core.wquant import quantize_weight
+from repro.core.wquant import quantize_weight, weight_checksum
 from repro.kernels.quant_dot import (STREAM_INTERPRET_ENV, epilogue_dot,
                                      pallas_quant_dot, quant_dot_blocks)
 from repro.kernels.registry import QSPECS
@@ -88,7 +89,16 @@ def _run_d_sweep(csv: List[str], smoke: bool, records: Optional[List]):
     overlap claim is the structural jaxpr assertion in tests; the ms
     records gate the trajectory. The CSV also logs the streamed
     BlockDecision (schedule + charged VMEM including the ring) at the
-    sweep's pinned tile."""
+    sweep's pinned tile.
+
+    PR 10 adds the ABFT A/B column: the checksum-VERIFIED rotate-once
+    twin (same grid, same specs, plus the (1, n) checksum input and the
+    per-row f32 residual output) timed against the unverified kernel at
+    the same pinned tile -- the measured cost of runtime verification.
+    The real output is asserted bitwise identical and the healthy
+    residual is asserted under the calibrated tolerance on every sweep
+    point, so the record proves overhead AND zero false positives on the
+    exact shapes benchmarked."""
     rng = np.random.default_rng(1)
     n, rows, bn, mode = 1024, 64, 256, "int8"
     ds = (256, 512) if smoke else (256, 512, 1024, 2048)
@@ -108,12 +118,19 @@ def _run_d_sweep(csv: List[str], smoke: bool, records: Optional[List]):
                 a, q, s, plan, True, "revisit", bn))
             streamed = jax.jit(lambda a, q, s: pallas_quant_dot(
                 a, q, s, plan, True, "streamed", bn))
+            cw = weight_checksum(wq, sw)
+            abft = jax.jit(lambda a, q, s, c: pallas_quant_dot(
+                a, q, s, plan, True, "rotate_once", bn, check=c))
             t_once = _time_min(once, x, wq, sw)
             t_revisit = _time_min(revisit, x, wq, sw)
             t_streamed = _time_min(streamed, x, wq, sw)
+            t_abft = _time_min(abft, x, wq, sw, cw)
             ref = np.asarray(once(x, wq, sw))
             assert (ref == np.asarray(revisit(x, wq, sw))).all()
             assert (ref == np.asarray(streamed(x, wq, sw))).all()
+            ya, resid = abft(x, wq, sw, cw)
+            assert (ref == np.asarray(ya)).all()
+            assert bool(verify.residual_ok(ya, resid, n=n, d=d).all())
             tiles = -(-d // bn)
             blocks = quant_dot_blocks(n, d, rows, jnp.float32, jnp.float32,
                                       mode, block_n=bn, schedule="streamed")
@@ -123,7 +140,8 @@ def _run_d_sweep(csv: List[str], smoke: bool, records: Optional[List]):
                 f"transforms_per_row_block_rotate_once=1,"
                 f"transforms_per_row_block_revisit={tiles},"
                 f"rotate_once_ms={t_once:.2f},revisit_ms={t_revisit:.2f},"
-                f"streamed_ms={t_streamed:.2f},"
+                f"streamed_ms={t_streamed:.2f},abft_ms={t_abft:.2f},"
+                f"abft_overhead={t_abft / t_once:.2f}x,"
                 f"streamed_schedule={blocks.schedule},"
                 f"streamed_vmem_bytes={blocks.vmem_bytes},"
                 f"speedup={t_revisit / t_once:.2f}x")
@@ -136,7 +154,8 @@ def _run_d_sweep(csv: List[str], smoke: bool, records: Optional[List]):
                 for backend, ms, tr in (
                         ("pallas_rotate_once", t_once, 1),
                         ("pallas_revisit", t_revisit, tiles),
-                        ("pallas_streamed", t_streamed, 1)):
+                        ("pallas_streamed", t_streamed, 1),
+                        ("pallas_rotate_once_abft", t_abft, 1)):
                     rec = {
                         "bench": f"quant_dot_dsweep_{mode}", "shape": shape,
                         "dtype": "float32", "backend": backend,
@@ -154,6 +173,10 @@ def _run_d_sweep(csv: List[str], smoke: bool, records: Optional[List]):
                         # the block planner's streamed accounting
                         rec["schedule"] = blocks.schedule
                         rec["vmem_bytes"] = blocks.vmem_bytes
+                    if backend == "pallas_rotate_once_abft":
+                        # checksum-verification cost relative to the
+                        # unverified kernel at the same pinned tile
+                        rec["abft_overhead"] = round(t_abft / t_once, 3)
                     records.append(rec)
     finally:
         if prev is None:

@@ -38,6 +38,10 @@ def _build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--no-serving", action="store_true",
                     help="skip the serving-engine sites (faster; no "
                     "donation/decode checks)")
+    ap.add_argument("--abft", action="store_true",
+                    help="also lint the checksum-verified (ABFT) kernel "
+                    "twins: the verification column must not break the "
+                    "fusion/rotate-once/DMA contracts")
     ap.add_argument("--mutation", action="store_true",
                     help="lint the committed broken-kernel fixtures "
                     "instead of the model sites; a healthy linter exits "
@@ -109,7 +113,8 @@ def main(argv: Optional[List[str]] = None) -> int:
             # serving sites are schedule-independent (the engine's own
             # ladder owns its schedule); trace them once per config
             part = run_rules(default_sites(
-                config, schedule, serving=not args.no_serving and i == 0),
+                config, schedule, serving=not args.no_serving and i == 0,
+                abft=args.abft),
                 rules=args.rule)
             report = part if report is None else report.merge(part)
     print(report.format_text())

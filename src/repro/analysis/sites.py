@@ -93,15 +93,19 @@ def _scaled(config_name: str):
 
 
 def kernel_sites(config_name: str, schedule: str = "rotate_once",
-                 *, block_n: int = 128) -> List[Site]:
+                 *, block_n: int = 128, abft: bool = False) -> List[Site]:
     """The fused quant_dot dispatches for ``config_name``: the 2-D
     dense kernel and the 3-D stacked-expert kernel, traced at the
     config's io dtype on a lint-sized problem (n = the 0.004-scaled
     d_model, d = 5 out-channel tiles so the streamed ring actually
-    cycles)."""
+    cycles). ``abft=True`` traces the checksum-VERIFIED twins instead
+    (stored column checksum in, (out, residual) out) -- the lint proof
+    that the verification column does not break the one-pallas_call
+    fusion, the rotate-once dot counts, or the streamed DMA ring."""
     import jax.numpy as jnp
 
     from repro.core.api import QuantEpilogue, plan_for
+    from repro.core.wquant import weight_checksum
     from repro.kernels.quant_dot import (pallas_quant_dot,
                                          pallas_quant_dot_experts,
                                          quant_dot_blocks)
@@ -111,6 +115,7 @@ def kernel_sites(config_name: str, schedule: str = "rotate_once",
     io = jnp.dtype(cfg.dtype)
     plan = plan_for(n, dtype=io, backend="pallas",
                     epilogue=QuantEpilogue("int8"))
+    tag = f"{schedule}/abft" if abft else schedule
     ctx = (_stream_interpret_forced() if schedule == "streamed"
            else contextlib.nullcontext())
     sites = []
@@ -118,32 +123,46 @@ def kernel_sites(config_name: str, schedule: str = "rotate_once",
         x = jnp.zeros((m, n), io)
         wq = jnp.zeros((n, d), jnp.int8)
         sw = jnp.ones((1, d), jnp.float32)
-        jaxpr, qw, shim = traced(
-            lambda a, q, s: pallas_quant_dot(a, q, s, plan, True,
-                                             schedule, block_n),
-            x, wq, sw)
+        decision = quant_dot_blocks(n, d, m, io, plan.compute_dtype,
+                                    "int8", block_m=plan.block_m,
+                                    block_n=block_n, schedule=schedule,
+                                    abft=abft)
+        if abft:
+            cw = weight_checksum(wq, sw)
+            jaxpr, qw, shim = traced(
+                lambda a, q, s, c: pallas_quant_dot(a, q, s, plan, True,
+                                                    schedule, block_n,
+                                                    check=c),
+                x, wq, sw, cw)
+        else:
+            jaxpr, qw, shim = traced(
+                lambda a, q, s: pallas_quant_dot(a, q, s, plan, True,
+                                                 schedule, block_n),
+                x, wq, sw)
         sites.append(Site(
-            name=f"quant_dot[{config_name}/{schedule}]", kind="kernel",
-            jaxpr=jaxpr, schedule=schedule, plan=plan,
-            decision=quant_dot_blocks(n, d, m, io, plan.compute_dtype,
-                                      "int8", block_m=plan.block_m,
-                                      block_n=block_n, schedule=schedule),
+            name=f"quant_dot[{config_name}/{tag}]", kind="kernel",
+            jaxpr=jaxpr, schedule=schedule, plan=plan, decision=decision,
             io_dtype=io, qw_calls=qw, shim_calls=shim))
 
         xe = jnp.zeros((1, 2, m, n), io)
         wqe = jnp.zeros((2, n, d), jnp.int8)
         swe = jnp.ones((2, 1, d), jnp.float32)
-        jaxpr, qw, shim = traced(
-            lambda a, q, s: pallas_quant_dot_experts(a, q, s, plan, True,
-                                                     schedule, block_n),
-            xe, wqe, swe)
+        if abft:
+            cwe = weight_checksum(wqe, swe)
+            jaxpr, qw, shim = traced(
+                lambda a, q, s, c: pallas_quant_dot_experts(
+                    a, q, s, plan, True, schedule, block_n, check=c),
+                xe, wqe, swe, cwe)
+        else:
+            jaxpr, qw, shim = traced(
+                lambda a, q, s: pallas_quant_dot_experts(a, q, s, plan,
+                                                         True, schedule,
+                                                         block_n),
+                xe, wqe, swe)
         sites.append(Site(
-            name=f"quant_dot_experts[{config_name}/{schedule}]",
+            name=f"quant_dot_experts[{config_name}/{tag}]",
             kind="kernel", jaxpr=jaxpr, schedule=schedule, plan=plan,
-            decision=quant_dot_blocks(n, d, m, io, plan.compute_dtype,
-                                      "int8", block_m=plan.block_m,
-                                      block_n=block_n, schedule=schedule),
-            io_dtype=io, qw_calls=qw, shim_calls=shim))
+            decision=decision, io_dtype=io, qw_calls=qw, shim_calls=shim))
     return sites
 
 
@@ -235,9 +254,12 @@ def serving_sites(config_name: str, *, backend: str = "xla",
 
 
 def default_sites(config_name: str, schedule: str = "rotate_once",
-                  *, serving: bool = True) -> List[Site]:
-    """Every lintable site for one (config, schedule) pair."""
+                  *, serving: bool = True, abft: bool = False) -> List[Site]:
+    """Every lintable site for one (config, schedule) pair. ``abft=True``
+    additionally lints the checksum-verified kernel twins."""
     sites = kernel_sites(config_name, schedule)
+    if abft:
+        sites += kernel_sites(config_name, schedule, abft=True)
     sites += model_sites(config_name)
     if serving:
         sites += serving_sites(config_name)

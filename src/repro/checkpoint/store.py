@@ -19,6 +19,13 @@ Design points for 1000+-node deployments (scaled to this container):
     static mode/axes metadata from the template. Legacy pre-QTensor
     checkpoints ({'wq','ws'} dicts) restore onto QTensor templates
     unchanged -- both flatten to the same (values, scales) leaf order.
+  * Content integrity (PR 10): every leaf's manifest entry records a
+    CRC-32 of the exact bytes written plus the leaf's tree path; restore
+    recomputes the CRC over the bytes it read back and fails LOUDLY,
+    naming the leaf path, on any mismatch -- a silently bit-rotted
+    weight file must never become a silently wrong model (that is the
+    storage-side twin of the runtime ABFT checksums in ``repro.verify``).
+    Manifests without CRCs (pre-PR 10) restore unchecked, unchanged.
 """
 from __future__ import annotations
 
@@ -26,6 +33,7 @@ import json
 import os
 import shutil
 import threading
+import zlib
 from typing import Any, Optional, Tuple
 
 import jax
@@ -35,8 +43,13 @@ _WRITER: Optional[threading.Thread] = None
 
 
 def _flatten_with_paths(tree):
-    flat, treedef = jax.tree.flatten(tree)
-    return flat, treedef
+    """(leaves, treedef, path strings) -- paths name leaves in manifest
+    entries and integrity errors (['groups'][0]['p0']['mlp']['w_down'].q
+    beats arr_37.npy when a restore reports corruption)."""
+    flat_p, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    flat = [leaf for _, leaf in flat_p]
+    paths = [jax.tree_util.keystr(path) for path, _ in flat_p]
+    return flat, treedef, paths
 
 
 def _to_numpy(x) -> Tuple[np.ndarray, str]:
@@ -57,7 +70,7 @@ def _from_numpy(a: np.ndarray, want_dtype) -> np.ndarray:
 
 def save_checkpoint(ckpt_dir: str, step: int, tree: Any, *, async_write: bool = True):
     """Serialize a pytree of arrays. Returns immediately if async."""
-    flat, treedef = _flatten_with_paths(tree)
+    flat, treedef, paths = _flatten_with_paths(tree)
     host = [_to_numpy(x)[0] for x in flat]        # fetch before backgrounding
     tdef_str = str(treedef)
 
@@ -70,7 +83,10 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any, *, async_write: bool = 
         manifest = {"step": step, "treedef": tdef_str, "leaves": []}
         for i, arr in enumerate(host):
             np.save(os.path.join(tmp, f"arr_{i}.npy"), arr)
-            manifest["leaves"].append({"shape": list(arr.shape), "dtype": str(arr.dtype)})
+            manifest["leaves"].append({
+                "shape": list(arr.shape), "dtype": str(arr.dtype),
+                "path": paths[i],
+                "crc": zlib.crc32(np.ascontiguousarray(arr).tobytes())})
         with open(os.path.join(tmp, "tree.json"), "w") as f:
             json.dump(manifest, f)
         if os.path.exists(out):
@@ -118,8 +134,28 @@ def restore_checkpoint(ckpt_dir: str, step: int, template: Any,
             "tree structure does not match (e.g. restoring a raw-weight "
             "checkpoint onto a QTensor template or vice versa: re-run "
             "quantize_lm_weights on the restored raw tree instead)")
-    arrs = [_from_numpy(np.load(os.path.join(out, f"arr_{i}.npy")), t.dtype)
-            for i, t in enumerate(flat_t)]
+    arrs = []
+    for i, t in enumerate(flat_t):
+        a = np.load(os.path.join(out, f"arr_{i}.npy"))
+        entry = manifest["leaves"][i]
+        if "crc" in entry:      # pre-PR 10 manifests restore unchecked
+            name = entry.get("path", f"leaf[{i}]")
+            got_crc = zlib.crc32(np.ascontiguousarray(a).tobytes())
+            if got_crc != entry["crc"]:
+                raise ValueError(
+                    f"checkpoint leaf {name} (arr_{i}.npy in {out}) is "
+                    f"CORRUPT: stored CRC-32 {entry['crc']:#010x} != "
+                    f"recomputed {got_crc:#010x} over {a.nbytes} bytes -- "
+                    "the file changed since save_checkpoint wrote it "
+                    "(bit rot, truncated write, or off-path mutation); "
+                    "restore from an older .done step")
+            if list(a.shape) != entry["shape"] \
+                    or str(a.dtype) != entry["dtype"]:
+                raise ValueError(
+                    f"checkpoint leaf {name} (arr_{i}.npy in {out}) has "
+                    f"shape {a.shape}/{a.dtype} but its manifest entry "
+                    f"says {tuple(entry['shape'])}/{entry['dtype']}")
+        arrs.append(_from_numpy(a, t.dtype))
     if shardings is not None:
         flat_s = jax.tree.leaves(shardings, is_leaf=lambda x: hasattr(x, "spec") or x is None)
         arrs = [jax.device_put(a, s) if s is not None else jax.device_put(a)

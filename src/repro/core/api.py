@@ -661,6 +661,60 @@ def _quant_dot_qw_bwd(plan, interpret, schedule, res, g):
 _quant_dot_qw.defvjp(_quant_dot_qw_fwd, _quant_dot_qw_bwd)
 
 
+def _abft_quant_dot_impl(x, wq, sw, cw, plan, interpret, schedule):
+    """Checksum-verified serving quant_dot (``repro.verify``, DESIGN.md
+    section 14). Fused backends emit the per-row checksum residual from
+    INSIDE the pallas_call (the verified kernel's real output is graph-
+    identical to the unverified one); non-fused paths run the normal
+    dispatch and derive the residual from the XLA oracle recompute.
+    Rows whose residual exceeds the calibrated tolerance are poisoned
+    with NaN -- an exact ``where`` select, so a healthy run is BITWISE
+    identical to ABFT-off -- and surface at the serving step's logits
+    guard, which retires the slot instead of emitting corrupt tokens."""
+    from repro import verify
+    from repro.kernels.quant_dot import xla_quant_dot_resid
+
+    registry.TRACE_COUNTS[("abft", "quant_dot_site")] += 1
+    be = get_backend(plan.backend)
+    if _qd_fusable(plan) and be.quant_dot_fused:
+        y, resid = be.quant_dot(x, wq, sw, plan, interpret, schedule,
+                                check=cw)
+    else:
+        y = _dispatch_quant_dot(x, wq, sw, plan, interpret, schedule)
+        resid = xla_quant_dot_resid(x, wq, sw, cw, plan, interpret)
+    ok = verify.residual_ok(y, resid, n=wq.shape[0], d=wq.shape[-1])
+    return jnp.where(ok, y, jnp.asarray(jnp.nan, y.dtype))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _quant_dot_qw_abft(x, wq, sw, cw, plan: HadamardPlan, interpret: bool,
+                       schedule=None):
+    """ABFT twin of ``_quant_dot_qw``: same serving semantics plus the
+    column-checksum verification of ``_abft_quant_dot_impl``. The
+    checksum vector ``cw`` is a statistic of the weight (zero pullback,
+    like ``wq``/``sw``); the backward pass is the identical STE."""
+    return _abft_quant_dot_impl(x, wq, sw, cw, plan, interpret, schedule)
+
+
+def _quant_dot_qw_abft_fwd(x, wq, sw, cw, plan, interpret, schedule):
+    return (_abft_quant_dot_impl(x, wq, sw, cw, plan, interpret, schedule),
+            (wq, sw, cw))
+
+
+def _quant_dot_qw_abft_bwd(plan, interpret, schedule, res, g):
+    wq, sw, cw = res
+    W = _dequant_weight(wq, sw)
+    gy = jnp.matmul(g.astype(jnp.float32), W.T,
+                    preferred_element_type=jnp.float32)
+    gx = _dispatch_transform(
+        gy.astype(jnp.dtype(plan.dtype)), _strip(plan), interpret)
+    return (gx, _zero_cotangent(wq), _zero_cotangent(sw),
+            _zero_cotangent(cw))
+
+
+_quant_dot_qw_abft.defvjp(_quant_dot_qw_abft_fwd, _quant_dot_qw_abft_bwd)
+
+
 def _quant_dot_w_impl(x, w, plan: HadamardPlan, interpret: bool,
                       schedule=None):
     from repro.core.wquant import quantize_weight
@@ -904,6 +958,52 @@ def _qd_experts_qw_bwd(plan, interpret, schedule, res, g):
 _quant_dot_experts_qw.defvjp(_qd_experts_qw_fwd, _qd_experts_qw_bwd)
 
 
+def _abft_quant_dot_experts_impl(x, wq, sw, cw, plan, interpret, schedule):
+    """Checksum-verified expert consumer: the fused 3-D kernel emits a
+    per-(expert, row) residual alongside the real output (DESIGN.md
+    section 14); rows that fail verification are NaN-poisoned via an
+    exact select (healthy runs stay bitwise identical to ABFT-off).
+    Callers gate on ``_qd_experts_fusable`` -- the einsum form has no
+    checksum output."""
+    from repro import verify
+
+    registry.TRACE_COUNTS[("abft", "quant_dot_experts_site")] += 1
+    y, resid = get_backend(plan.backend).quant_dot_experts(
+        x, wq, sw, plan, interpret, schedule, check=cw)
+    ok = verify.residual_ok(y, resid, n=wq.shape[1], d=wq.shape[-1])
+    return jnp.where(ok, y, jnp.asarray(jnp.nan, y.dtype))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _quant_dot_experts_qw_abft(x, wq, sw, cw, plan: HadamardPlan,
+                               interpret: bool, schedule=None):
+    """ABFT twin of ``_quant_dot_experts_qw`` (fused form only); ``cw``
+    is a weight statistic with zero pullback, backward is the same STE."""
+    return _abft_quant_dot_experts_impl(x, wq, sw, cw, plan, interpret,
+                                        schedule)
+
+
+def _qd_experts_qw_abft_fwd(x, wq, sw, cw, plan, interpret, schedule):
+    return (_abft_quant_dot_experts_impl(x, wq, sw, cw, plan, interpret,
+                                         schedule),
+            (wq, sw, cw))
+
+
+def _qd_experts_qw_abft_bwd(plan, interpret, schedule, res, g):
+    wq, sw, cw = res
+    W = wq.astype(jnp.float32) * sw                     # (E, f, d)
+    gf = g.astype(jnp.float32)
+    gy = jnp.einsum("becd,efd->becf", gf, W)
+    gx = _dispatch_transform(
+        gy.astype(jnp.dtype(plan.dtype)), _strip(plan), interpret)
+    return (gx, _zero_cotangent(wq), _zero_cotangent(sw),
+            _zero_cotangent(cw))
+
+
+_quant_dot_experts_qw_abft.defvjp(_qd_experts_qw_abft_fwd,
+                                  _qd_experts_qw_abft_bwd)
+
+
 def _quant_dot_experts_w_impl(x, w, plan, interpret, schedule=None):
     from repro.core.wquant import quantize_weight
 
@@ -992,6 +1092,7 @@ class RotationSpec:
     backend: Optional[str] = None
     block_m: Optional[int] = None
     compute_dtype: Optional[str] = None
+    abft: bool = False
 
     def __post_init__(self):
         if self.mode != "none" and self.mode not in QSPECS:
@@ -1011,7 +1112,8 @@ class RotationSpec:
         return cls(
             n=n, mode=cfg.mode if q else "none",
             rotate=cfg.rotating if rotate is None else rotate,
-            per_token=per_token, backend=_cfg_backend_name(cfg.backend))
+            per_token=per_token, backend=_cfg_backend_name(cfg.backend),
+            abft=bool(getattr(cfg, "abft", False)))
 
     def plan(self, dtype) -> HadamardPlan:
         epi = None
@@ -1029,13 +1131,32 @@ class RotationSpec:
                 f"RotationSpec was built for n={self.n} but x has last "
                 f"axis {x.shape[-1]}")
         if self.rotate:
-            return hadamard(x, self.plan(x.dtype), interpret=interpret)
+            y = hadamard(x, self.plan(x.dtype), interpret=interpret)
+            if self.mode == "none" and self._abft_verifying():
+                # pure-rotation site: the transform-linearity invariant
+                # (sum-of-outputs vs transform-of-sum) verifies the whole
+                # batch for ~1/m of the site's cost; a failed check
+                # NaN-poisons the site via an exact select, so healthy
+                # runs stay bitwise identical to ABFT-off and the serving
+                # logits guard attributes the trip (DESIGN.md section 14).
+                from repro.core.hadamard import hadamard_check
+
+                registry.TRACE_COUNTS[("abft", "rotation_site")] += 1
+                ok = hadamard_check(x, y, scale=self.scale,
+                                    compute_dtype=self.compute_dtype)
+                y = jnp.where(ok, y, jnp.asarray(jnp.nan, y.dtype))
+            return y
         if self.mode != "none":
             from repro.core.quant import quantize
 
             return quantize(x, self.mode,
                             axis=-1 if self.per_token else None)
         return x
+
+    def _abft_verifying(self) -> bool:
+        from repro.verify.abft import abft_enabled
+
+        return self.abft or abft_enabled()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -1071,6 +1192,7 @@ class QuantDotSpec:
     compute_dtype: Optional[str] = None
     weight_axes: Optional[Tuple[Optional[str], ...]] = None
     schedule: Optional[str] = None
+    abft: bool = False
 
     def __post_init__(self):
         if self.mode != "none" and self.mode not in QSPECS:
@@ -1096,7 +1218,8 @@ class QuantDotSpec:
                    per_token=cfg.per_token,
                    backend=_cfg_backend_name(cfg.backend),
                    schedule=getattr(cfg, "schedule", None),
-                   weight_axes=weight_axes)
+                   weight_axes=weight_axes,
+                   abft=bool(getattr(cfg, "abft", False)))
 
     @property
     def quantizing(self) -> bool:
@@ -1152,6 +1275,15 @@ class QuantDotSpec:
     def __call__(self, x, w, *, interpret: Optional[bool] = None):
         return self.bind(w, interpret=interpret)(x)
 
+    def _abft_verifying(self, w) -> bool:
+        """ABFT-verify this site? Needs BOTH the stored checksum (the
+        weight was quantized under an abft config / ``REPRO_ABFT``) and
+        the runtime switch -- checksums alone are inert metadata."""
+        from repro.verify.abft import abft_enabled
+
+        return getattr(w, "check", None) is not None and (
+            self.abft or abft_enabled())
+
     def _apply_qtensor(self, w, interpret, x):
         if not self.quantizing or w.mode != self.mode:
             # storage-only weight at a site whose config does not consume
@@ -1161,6 +1293,16 @@ class QuantDotSpec:
             if interpret is None:
                 interpret = jax.default_backend() != "tpu"
             plan = self.plan(x.dtype, d=w.q.shape[-1])
+            if self._abft_verifying(w):
+                if plan.mesh_axes is None:
+                    return _quant_dot_qw_abft(x, w.q, w.scale, w.check,
+                                              plan, interpret,
+                                              self.schedule)
+                registry.warn_once(
+                    ("abft", "sharded_fallback"),
+                    "ABFT checksums are present but the plan shards over "
+                    f"mesh axes {plan.mesh_axes}; the shard_map dispatch "
+                    "has no checksum output, so this site runs UNVERIFIED")
             return _quant_dot_qw(x, w.q, w.scale, plan, interpret,
                                  self.schedule)
         # no rotation site: real quantized matmul, pre-quantized weight
@@ -1213,6 +1355,19 @@ class QuantDotSpec:
         if not self.quantizing or w.mode != self.mode:
             return self._apply_experts_raw(w.dequant(x.dtype), interpret, x)
         if self.rotate:
+            if self._abft_verifying(w):
+                if interpret is None:
+                    interpret = jax.default_backend() != "tpu"
+                plan = self.plan(x.dtype)
+                if _qd_experts_fusable(plan):
+                    return _quant_dot_experts_qw_abft(
+                        x, w.q, w.scale, w.check, plan, interpret,
+                        self.schedule)
+                registry.warn_once(
+                    ("abft", "experts_einsum_fallback"),
+                    "ABFT checksums are present but the expert site runs "
+                    "the einsum form (active mesh or non-fusable plan), "
+                    "which has no checksum output; it runs UNVERIFIED")
             return quant_dot_experts(x, w, self.plan(x.dtype),
                                      interpret=interpret,
                                      schedule=self.schedule)

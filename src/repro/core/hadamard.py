@@ -41,6 +41,7 @@ __all__ = [
     "largest_pow2_divisor",
     "resolve_scale",
     "resolve_compute_dtype",
+    "hadamard_check",
 ]
 
 MXU_TILE = 128
@@ -191,6 +192,51 @@ def hadamard_transform(x: jnp.ndarray, scale: Optional[str] = "ortho") -> jnp.nd
     explicit numeric multiplier. Unknown strings raise ``ValueError``.
     """
     return _hadamard_transform_jit(x, resolve_scale(scale, max(x.shape[-1], 1)))
+
+
+def hadamard_check(x: jnp.ndarray, y: jnp.ndarray, *, scale="ortho",
+                   compute_dtype=None) -> jnp.ndarray:
+    """Linearity invariant of a pure-rotation site (ABFT, DESIGN.md s14).
+
+    The transform is linear, so the column-sum of the outputs must equal
+    the transform of the column-sum of the inputs:
+
+        sum_i H(x)[i, :]  ==  H(sum_i x[i, :])
+
+    The reference side is recomputed here in f32 on the summed row -- a
+    single (1, n) transform regardless of batch size, so the check costs
+    ~1/m of the site it guards and adds no extra pallas_call. A corrupted
+    output element (bit flip, clobbered tile) shifts one column sum by
+    the corruption magnitude while the reference side is untouched.
+
+    Tolerance has two terms, each scaled by the per-column absolute
+    output mass: the compute/storage dtype's per-element rounding, whose
+    errors over the m summed rows partially cancel (~colmass/sqrt(m),
+    the dominant term at bf16/fp16), and the f32 summation/transform
+    chains on both sides of the comparison (~eps_f32 * sqrt(m + n) *
+    colmass, the dominant term at f32). C = 8 is calibrated with ~10x
+    headroom over the measured healthy worst case across dtypes and
+    shapes (tests/test_abft.py); detection sensitivity at bf16 is a
+    fraction of a typical element, at f32 ~1e-5 relative. Returns a
+    scalar bool verdict (True = site verified); non-finite outputs also
+    fail (NaN compares unordered).
+    """
+    n = x.shape[-1]
+    xr = x.reshape(-1, n).astype(jnp.float32)
+    yr = y.reshape(-1, n).astype(jnp.float32)
+    m = max(xr.shape[0], 1)
+    cd = resolve_compute_dtype(x.dtype, compute_dtype)
+    eps = float(jnp.finfo(jnp.dtype(cd)).eps)
+    if jnp.issubdtype(jnp.dtype(y.dtype), jnp.floating):
+        eps = max(eps, float(jnp.finfo(jnp.dtype(y.dtype)).eps))
+    eps32 = float(jnp.finfo(jnp.float32).eps)
+    ref = _apply_passes(jnp.sum(xr, axis=0, keepdims=True), n,
+                        base_matrices(n, resolve_scale(scale, n)))
+    got = jnp.sum(yr, axis=0, keepdims=True)
+    colmass = jnp.sum(jnp.abs(yr), axis=0, keepdims=True)
+    tol = 8.0 * (eps * (colmass / math.sqrt(m) + jnp.max(jnp.abs(yr)))
+                 + eps32 * math.sqrt(m + n) * colmass) + 1e-30
+    return jnp.all(jnp.abs(got - ref) <= tol)
 
 
 def largest_pow2_divisor(n: int) -> int:

@@ -37,6 +37,11 @@ class QuantConfig:
              None defers to REPRO_QUANT_DOT_SCHEDULE, then the default).
              The serving engine's degradation ladder re-warms on
              config replicas that pin this field one rung down.
+    abft:    algorithm-based fault tolerance: store ABFT column checksums
+             on every QTensor weight and verify the fused quant_dot
+             outputs + serving KV cache at run time (silent-data-
+             corruption detection; ``repro.verify``, DESIGN.md section
+             14). ``REPRO_ABFT=1`` enables it without a config edit.
     """
     mode: str = "none"
     rotate: str = "none"
@@ -44,6 +49,7 @@ class QuantConfig:
     kv_quant: bool = False
     per_token: bool = True
     schedule: Optional[str] = None
+    abft: bool = False
 
     _MODES = ("none", "int8", "fp8_e4m3", "fp8_e5m2")
     _ROTATES = ("none", "hadamard")

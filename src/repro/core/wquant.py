@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["QTensor", "quantize_weight", "quantize_lm_weights",
-           "dequant_tree", "is_qleaf", "qweight_specs",
+           "dequant_tree", "is_qleaf", "qweight_specs", "weight_checksum",
            "QUANTIZE_WEIGHT_CALLS", "reset_quantize_weight_calls"]
 
 _MIN_SIZE = 1 << 16   # don't quantize tiny leaves (norms, biases, LoRAs)
@@ -51,19 +51,30 @@ class QTensor:
 
     q:     (..., n, d) int8 / fp8 storage-dtype values
     scale: (..., 1, d) f32 absmax scales over the contraction axis
+    check: (..., 1, n) f32 ABFT column-checksum vector, or None. Row k
+           holds sum_d q[k, d] * scale[d] -- the dequantized row sums --
+           so for any activation row a the identity
+           ``sum_d (a . W)[d] == a . check`` holds exactly in real
+           arithmetic. ``verify.abft`` uses it to detect silent weight /
+           compute corruption at run time (DESIGN.md section 14). None
+           (the default) is an EMPTY pytree subtree: trees built without
+           ABFT keep their leaf count, checkpoints, and shardings
+           byte-identical.
     mode:  'int8' | 'fp8_e4m3' | 'fp8_e5m2'   (static metadata)
     axes:  logical sharding axes of the ORIGINAL weight (static metadata;
            None when unknown). ``qweight_specs`` derives both children's
            partition specs from this, so the sharding layer needs no side
            table.
 
-    Registered as a pytree node: q/scale are children (scan slices the
-    layer axis of both together; checkpoints serialize both), mode/axes
-    are aux data. Iterable as ``(q, scale)`` for the legacy tuple unpack.
+    Registered as a pytree node: q/scale/check are children (scan slices
+    the layer axis of all of them together; checkpoints serialize them),
+    mode/axes are aux data. Iterable as ``(q, scale)`` for the legacy
+    tuple unpack.
     """
 
     q: Any
     scale: Any
+    check: Any = None
     mode: str = "int8"
     axes: Optional[Tuple[Optional[str], ...]] = None
 
@@ -83,11 +94,21 @@ class QTensor:
 
 
 jax.tree_util.register_dataclass(
-    QTensor, data_fields=("q", "scale"), meta_fields=("mode", "axes"))
+    QTensor, data_fields=("q", "scale", "check"), meta_fields=("mode", "axes"))
+
+
+def weight_checksum(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """The ABFT column-checksum vector of a quantized weight: f32
+    ``(..., 1, n)`` with entry k = sum_d q[..., k, d] * scale[..., 0, d]
+    (the row sums of the DEQUANTIZED weight). ``verify.params_ok``
+    recomputes this expression verbatim against the stored copy, so keep
+    the op order stable."""
+    return (q.astype(jnp.float32) * scale).sum(axis=-1)[..., None, :]
 
 
 def quantize_weight(w: jnp.ndarray, mode: str, *,
-                    axes: Optional[Tuple] = None) -> QTensor:
+                    axes: Optional[Tuple] = None,
+                    with_check: bool = False) -> QTensor:
     """Offline weight quantization for ``quant_dot`` consumers: a
     :class:`QTensor` with ``q`` in the mode's real storage dtype (int8 /
     fp8) and f32 per-OUT-channel scales (absmax over the contraction
@@ -97,13 +118,17 @@ def quantize_weight(w: jnp.ndarray, mode: str, *,
 
     w: (..., n, d) -- leading dims (e.g. stacked experts) keep their own
     scales: scale is (..., 1, d). ``axes`` attaches the weight's logical
-    sharding axes as QTensor metadata."""
+    sharding axes as QTensor metadata. ``with_check=True`` additionally
+    precomputes the ABFT column checksum (``weight_checksum``) so
+    run-time verification never re-reads the healthy weight."""
     from repro.kernels.registry import QSPECS, _quantize_rows
 
     global QUANTIZE_WEIGHT_CALLS
     QUANTIZE_WEIGHT_CALLS += 1
     q, s = _quantize_rows(w.astype(jnp.float32), mode, axis=-2)
-    return QTensor(q=q.astype(QSPECS[mode][1]), scale=s, mode=mode, axes=axes)
+    q = q.astype(QSPECS[mode][1])
+    chk = weight_checksum(q, s) if with_check else None
+    return QTensor(q=q, scale=s, check=chk, mode=mode, axes=axes)
 
 
 def _should_quantize(path, leaf) -> bool:
@@ -140,8 +165,14 @@ def quantize_lm_weights(params, cfg=None, specs=None):
     the matching ``lm_param_specs`` tree) attaches each leaf's logical
     sharding axes to the QTensor so ``qweight_specs`` can re-derive the
     sharding tree from the params alone."""
+    from repro.verify.abft import abft_enabled
+
     qc = getattr(cfg, "quant", None)
     consuming = qc is not None and qc.rotating and qc.enabled
+    # ABFT checksums ride every QTensor leaf when enabled -- by config or
+    # by env -- so the spec/sharding trees derived from eval_shape stay
+    # structurally coherent with the params actually built
+    with_check = bool(getattr(qc, "abft", False)) or abft_enabled()
 
     def fix(path, leaf, spec=None):
         if not hasattr(leaf, "ndim"):
@@ -153,9 +184,11 @@ def quantize_lm_weights(params, cfg=None, specs=None):
                 and leaf.dtype in (jnp.bfloat16, jnp.float16, jnp.float32):
             # rotation-consumer site: stored in the serving quant mode
             # regardless of size (quant_dot contracts against it natively)
-            return quantize_weight(leaf, qc.mode, axes=axes)
+            return quantize_weight(leaf, qc.mode, axes=axes,
+                                   with_check=with_check)
         if _should_quantize(path, leaf):
-            return quantize_weight(leaf, "int8", axes=axes)
+            return quantize_weight(leaf, "int8", axes=axes,
+                                   with_check=with_check)
         return leaf
 
     if specs is None:
@@ -187,8 +220,15 @@ def qweight_specs(spec_tree, shape_tree):
         if is_qleaf(sds):
             axes = sds.axes if sds.axes is not None else tuple(spec)
             scale_spec = tuple(axes[:-2]) + (None, axes[-1])
+            # check is (..., 1, n): the contraction axis lands last, so
+            # it inherits axes[-2]; presence tracks the shape tree (the
+            # eval_shape of the SAME init the real params ran through),
+            # keeping spec and params structurally coherent
+            check_spec = (tuple(axes[:-2]) + (None, axes[-2])
+                          if getattr(sds, "check", None) is not None
+                          else None)
             return QTensor(q=tuple(axes), scale=scale_spec,
-                           mode=sds.mode, axes=sds.axes)
+                           check=check_spec, mode=sds.mode, axes=sds.axes)
         return spec
 
     return jax.tree.map(fix, spec_tree, shape_tree, is_leaf=is_spec)

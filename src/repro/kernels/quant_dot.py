@@ -117,8 +117,9 @@ from repro.kernels.registry import (
 )
 
 __all__ = ["pallas_quant_dot", "pallas_quant_dot_experts", "xla_quant_dot",
-           "epilogue_dot", "quant_dot_blocks", "BlockDecision",
-           "SCHEDULE_ENV_VAR", "SCHEDULES", "STREAM_INTERPRET_ENV"]
+           "xla_quant_dot_resid", "epilogue_dot", "quant_dot_blocks",
+           "BlockDecision", "SCHEDULE_ENV_VAR", "SCHEDULES",
+           "STREAM_INTERPRET_ENV"]
 
 _CONTRACT = (((1,), (0,)), ((), ()))  # plain (m, k) @ (k, n)
 
@@ -240,7 +241,8 @@ class BlockDecision(tuple):
 
 def quant_dot_blocks(n: int, d: int, m: int, dtype, compute_dtype,
                      mode: str, block_m=None, block_n=None,
-                     schedule: str = "rotate_once") -> BlockDecision:
+                     schedule: str = "rotate_once",
+                     abft: bool = False) -> BlockDecision:
     """The tile decision for the fused kernel, charging every VMEM
     resident of the requested schedule: the input tile + compute-dtype
     working copy per row, the SCRATCH dot-operand tile (int8 / bf16) + the
@@ -264,7 +266,16 @@ def quant_dot_blocks(n: int, d: int, m: int, dtype, compute_dtype,
 
     Because the rotate-once schedule makes weight-tile revisits free of
     transform recompute, ``block_n`` is allowed up to 1024 (PR 3 capped
-    it at 512 to keep the per-revisit transform bill bounded)."""
+    it at 512 to keep the per-revisit transform bill bounded).
+
+    ``abft=True`` charges the checksum-verified kernel variant: the
+    (1, n) f32 column-checksum input tile (block-constant across the
+    grid) plus 12 bytes/row for the per-row verification residents (the
+    f32 chk + acc scratch columns and the residual output tile). Block
+    sizes may therefore differ from the unverified decision -- harmless,
+    because every output element is computed from its full n-contraction
+    regardless of tiling (the schedule-parity tests assert bitwise
+    identity across decisions)."""
     in_b = jnp.dtype(dtype).itemsize
     cb = jnp.dtype(compute_dtype).itemsize
     is_int = QSPECS[mode][2]
@@ -280,9 +291,13 @@ def quant_dot_blocks(n: int, d: int, m: int, dtype, compute_dtype,
     # per-row residents independent of bn: input tile + compute copy +
     # scratch operand + f32 scratch scale
     row_fixed = n * (in_b + cb + qb) + 4
+    fixed = 0
+    if abft:
+        row_fixed += 12             # chk + acc scratch + residual out tile
+        fixed = n * 4               # (1, n) f32 column-checksum input
 
     def vmem(bm_, bn_):
-        return bm_ * row_fixed + bn_ * (n * wb + bm_ * in_b + swb)
+        return fixed + bm_ * row_fixed + bn_ * (n * wb + bm_ * in_b + swb)
 
     # bn always steps in 128-lane multiples so the BlockSpec last dim
     # stays MXU-tiled
@@ -291,7 +306,7 @@ def quant_dot_blocks(n: int, d: int, m: int, dtype, compute_dtype,
         if block_n is None:
             # pinned rows: the weight/output/sw tiles get everything the
             # rows leave
-            avail = _VMEM_BUDGET_BYTES - block_m * row_fixed
+            avail = _VMEM_BUDGET_BYTES - fixed - block_m * row_fixed
             while bn > 128 and bn * (n * wb + block_m * in_b + swb) > avail:
                 bn -= 128
         return BlockDecision(block_m, bn, schedule, vmem(block_m, bn))
@@ -301,7 +316,7 @@ def quant_dot_blocks(n: int, d: int, m: int, dtype, compute_dtype,
         while n * bn * wb > _VMEM_BUDGET_BYTES // 2 and bn > 128:
             bn -= 128
     per_row = row_fixed + bn * in_b
-    bm = max(8, (_VMEM_BUDGET_BYTES - bn * (n * wb + swb)) // per_row)
+    bm = max(8, (_VMEM_BUDGET_BYTES - fixed - bn * (n * wb + swb)) // per_row)
     bm = min(bm, 256, m)
     sub = 16 if in_b == 2 else 8
     bm = max(sub, (bm // sub) * sub)
@@ -434,6 +449,117 @@ def _quant_dot_kernel_revisit(x_ref, mats_ref, wq_ref, sw_ref, o_ref, *,
     o_ref[...] = (acc * s * sw_ref[...]).astype(o_ref.dtype)
 
 
+def _abft_check_col(op, cw):
+    """The activation-side ABFT checksum of a dot-operand row block:
+    ``chk[i] = sum_k op[i, k] * cw[k]`` with ``cw`` the precomputed
+    column checksum of the DEQUANTIZED weight (``wquant.weight_checksum``),
+    so ``sum_d y[i, d] == s[i] * chk[i]`` exactly in real arithmetic.
+    Written as elementwise multiply + reduction -- NOT ``dot_general`` --
+    so the rotate-once dot-placement contract (exactly one contraction
+    dot per grid step, ``num_passes`` rotation dots in the j == 0 region)
+    is untouched by verification. op: (bm, n) scratch operand, cw: (1, n)
+    f32 -> (bm, 1) f32."""
+    return jnp.sum(op.astype(jnp.float32) * cw, axis=-1, keepdims=True)
+
+
+def _quant_dot_kernel_rotate_once_abft(x_ref, mats_ref, wq_ref, sw_ref,
+                                       cw_ref, o_ref, r_ref, q_ref, s_ref,
+                                       chk_ref, acc_ref, *, n: int, mode: str,
+                                       compute_dtype):
+    """The rotate-once grid step with the ABFT checksum column riding
+    INSIDE the same pallas_call (fusion contract intact). j == 0
+    additionally stashes the activation checksum ``chk`` (one extra
+    n-element reduction per row block) and zeroes the row's output-sum
+    accumulator; every j folds the f32 PRE-CAST contribution's row sums
+    into the accumulator and rewrites the residual output
+    ``r = sum_d y_f32[i, :] - s[i] * chk[i]`` (j is sequential within
+    each row block, so the final j's write -- the full-row residual --
+    wins). The o_ref math is graph-identical to the unverified kernel:
+    ABFT-on outputs are bitwise ABFT-off outputs."""
+
+    @pl.when(pl.program_id(1) == 0)
+    def _rotate():
+        q, s = _rotate_quantize_block(x_ref[...], mats_ref, n=n, mode=mode,
+                                      compute_dtype=compute_dtype)
+        op = _operand_from_q(q, mode)
+        q_ref[...] = op
+        s_ref[...] = s
+        chk_ref[...] = _abft_check_col(op, cw_ref[...])
+        acc_ref[...] = jnp.zeros_like(acc_ref[...])
+
+    acc = _operand_dot(q_ref[...], wq_ref[...], mode)
+    contrib = acc * s_ref[...] * sw_ref[...]
+    o_ref[...] = contrib.astype(o_ref.dtype)
+    acc_ref[...] += jnp.sum(contrib, axis=-1, keepdims=True)
+    r_ref[...] = acc_ref[...] - s_ref[...] * chk_ref[...]
+
+
+def _quant_dot_kernel_streamed_abft(x_ref, mats_ref, wq_hbm, sw_hbm, cw_ref,
+                                    o_ref, r_ref, q_ref, s_ref, chk_ref,
+                                    acc_ref, w_ring, sw_ring, w_sem, s_sem,
+                                    *, n: int, mode: str, compute_dtype,
+                                    bn: int, nj: int):
+    """Streamed grid step + ABFT. The column checksum ``cw_ref`` rides as
+    a plain VMEM BlockSpec input OUTSIDE the DMA ring on purpose: the
+    residual then compares ring-delivered weight tiles against a
+    checksum that never travelled through the ring, so a mis-DMA'd or
+    clobbered tile (the riskiest failure of this schedule) is exactly
+    what trips it."""
+    j = pl.program_id(1)
+
+    def make_w(slot, jj):
+        return pltpu.make_async_copy(
+            wq_hbm.at[:, pl.ds(jj * bn, bn)], w_ring.at[slot],
+            w_sem.at[slot])
+
+    def make_s(slot, jj):
+        return pltpu.make_async_copy(
+            sw_hbm.at[:, pl.ds(jj * bn, bn)], sw_ring.at[slot],
+            s_sem.at[slot])
+
+    finish = _ring_dmas(make_w, make_s, j, nj)
+
+    @pl.when(j == 0)
+    def _rotate():
+        q, s = _rotate_quantize_block(x_ref[...], mats_ref, n=n, mode=mode,
+                                      compute_dtype=compute_dtype)
+        op = _operand_from_q(q, mode)
+        q_ref[...] = op
+        s_ref[...] = s
+        chk_ref[...] = _abft_check_col(op, cw_ref[...])
+        acc_ref[...] = jnp.zeros_like(acc_ref[...])
+
+    slot = finish()
+    acc = _operand_dot(q_ref[...], w_ring[slot], mode)
+    contrib = acc * s_ref[...] * sw_ring[slot]
+    o_ref[...] = contrib.astype(o_ref.dtype)
+    acc_ref[...] += jnp.sum(contrib, axis=-1, keepdims=True)
+    r_ref[...] = acc_ref[...] - s_ref[...] * chk_ref[...]
+
+
+def _quant_dot_kernel_revisit_abft(x_ref, mats_ref, wq_ref, sw_ref, cw_ref,
+                                   o_ref, r_ref, acc_ref, *, n: int,
+                                   mode: str, compute_dtype):
+    """Revisit grid step + ABFT: the transform recompute is deterministic
+    (same f32-grid values every j), so q/s/chk are simply recomputed per
+    step and only the output-sum accumulator needs scratch (zeroed at
+    j == 0 -- j is sequential under the 'arbitrary' grid semantics)."""
+    j = pl.program_id(1)
+    q, s = _rotate_quantize_block(x_ref[...], mats_ref, n=n, mode=mode,
+                                  compute_dtype=compute_dtype)
+    op = _operand_from_q(q, mode)
+
+    @pl.when(j == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref[...])
+
+    acc = _operand_dot(op, wq_ref[...], mode)
+    contrib = acc * s * sw_ref[...]
+    o_ref[...] = contrib.astype(o_ref.dtype)
+    acc_ref[...] += jnp.sum(contrib, axis=-1, keepdims=True)
+    r_ref[...] = acc_ref[...] - s * _abft_check_col(op, cw_ref[...])
+
+
 def _stream_interpret_forced() -> bool:
     return os.environ.get(STREAM_INTERPRET_ENV, "").lower() in (
         "1", "true", "force")
@@ -472,7 +598,7 @@ def _resolve_schedule(schedule, interpret: bool = False) -> str:
 
 
 def pallas_quant_dot(x, wq, sw, plan, interpret: bool, schedule=None,
-                     block_n=None):
+                     block_n=None, check=None):
     """Fused single-kernel rotate+quantize+GEMM over a 2D Pallas grid.
 
     x: (..., n) with n == plan.p (power of 2); wq: (n, d) storage-dtype
@@ -485,9 +611,22 @@ def pallas_quant_dot(x, wq, sw, plan, interpret: bool, schedule=None,
     ``_resolve_schedule``); ``block_n`` pins the out-channel tile
     (benchmark A/Bs hold the revisit count fixed with it). Both are
     static.
+
+    ``check`` (the QTensor's precomputed (1, n) f32 ABFT column checksum,
+    ``wquant.weight_checksum``) switches to the checksum-verified kernel
+    variant: the SAME single pallas_call additionally emits a per-row f32
+    residual ``r[i] = sum_d y_f32[i, :] - s[i] * (q[i, :] . check)`` --
+    float-rounding small when healthy, shifted by any silent weight /
+    DMA / accumulation corruption -- and the return value becomes
+    ``(out, resid)`` with resid shaped (..., 1). Output math is
+    graph-identical either way (``out`` is bitwise the check=None
+    result); ``verify.residual_ok`` turns resid into a verdict.
     """
-    return _pallas_quant_dot(x, wq, sw, plan, interpret,
-                             _resolve_schedule(schedule, interpret), block_n)
+    sched = _resolve_schedule(schedule, interpret)
+    if check is None:
+        return _pallas_quant_dot(x, wq, sw, plan, interpret, sched, block_n)
+    return _pallas_quant_dot_abft(x, wq, sw, check, plan, interpret, sched,
+                                  block_n)
 
 
 @functools.partial(jax.jit, static_argnames=("plan", "interpret", "schedule",
@@ -562,6 +701,89 @@ def _scratch_dtype(mode: str):
     return jnp.int8 if QSPECS[mode][2] else jnp.bfloat16
 
 
+@functools.partial(jax.jit, static_argnames=("plan", "interpret", "schedule",
+                                             "block_n"))
+def _pallas_quant_dot_abft(x, wq, sw, cw, plan, interpret: bool,
+                           schedule: str, block_n):
+    """The checksum-verified twin of :func:`_pallas_quant_dot`: same
+    grid, same specs plus the block-constant (1, n) f32 checksum input
+    and the (mp, 1) f32 residual output (its (bm, 1) tile at index
+    (i, 0) is revisited across the sequential j axis -- the standard
+    accumulator-output pattern; the final j's write is the full-row
+    residual). Kept a separate traced function so the unverified path's
+    jaxpr -- what the lint contracts and bitwise-parity suites pin --
+    is untouched by construction."""
+    TRACE_COUNTS[("pallas", "quant_dot")] += 1
+    TRACE_COUNTS[("abft", "kernel_resid_trace")] += 1
+    n = plan.p
+    mode = plan.epilogue.mode
+    cd = jnp.dtype(plan.compute_dtype)
+    mats = _plan_mats(plan)
+    lead = x.shape[:-1]
+    x2, m = _rows(x, n)
+    d = wq.shape[-1]
+    sw2 = sw.reshape(1, d).astype(jnp.float32)
+    cw2 = cw.reshape(1, n).astype(jnp.float32)
+    bm, bn = quant_dot_blocks(n, d, m, x.dtype, cd, mode,
+                              block_m=plan.block_m, block_n=block_n,
+                              schedule=schedule, abft=True)
+    x2, _ = _pad_rows(x2, bm)
+    pad_d = (-d) % bn
+    if pad_d:
+        wq2 = jnp.pad(wq, ((0, 0), (0, pad_d)))
+        sw2 = jnp.pad(sw2, ((0, 0), (0, pad_d)))
+    else:
+        wq2 = wq
+    mp, dp = x2.shape[0], d + pad_d
+    common = dict(n=n, mode=mode, compute_dtype=cd)
+    wq_spec = pl.BlockSpec((n, bn), lambda i, j: (0, j))
+    sw_spec = pl.BlockSpec((1, bn), lambda i, j: (0, j))
+    # chk + acc f32 columns live across the j loop beside q/s
+    verify_scratch = [pltpu.VMEM((bm, n), _scratch_dtype(mode)),
+                      pltpu.VMEM((bm, 1), jnp.float32),
+                      pltpu.VMEM((bm, 1), jnp.float32),    # chk
+                      pltpu.VMEM((bm, 1), jnp.float32)]    # acc
+    if schedule == "rotate_once":
+        kernel = functools.partial(_quant_dot_kernel_rotate_once_abft,
+                                   **common)
+        scratch = verify_scratch
+    elif schedule == "streamed":
+        kernel = functools.partial(_quant_dot_kernel_streamed_abft, **common,
+                                   bn=bn, nj=dp // bn)
+        scratch = verify_scratch + [
+            pltpu.VMEM((2, n, bn), wq2.dtype),      # weight ring
+            pltpu.VMEM((2, 1, bn), jnp.float32),    # scale ring
+            pltpu.SemaphoreType.DMA((2,)),          # weight sems
+            pltpu.SemaphoreType.DMA((2,))]          # scale sems
+        wq_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+        sw_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+    else:
+        kernel = functools.partial(_quant_dot_kernel_revisit_abft, **common)
+        scratch = [pltpu.VMEM((bm, 1), jnp.float32)]        # acc only
+    out, resid = pl.pallas_call(
+        kernel,
+        grid=(mp // bm, dp // bn),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((mats.shape[0],) + mats.shape[1:],
+                         lambda i, j: (0, 0, 0)),
+            wq_spec,
+            sw_spec,
+            pl.BlockSpec((1, n), lambda i, j: (0, 0)),
+        ],
+        out_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+                   pl.BlockSpec((bm, 1), lambda i, j: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((mp, dp), jnp.dtype(plan.dtype)),
+                   jax.ShapeDtypeStruct((mp, 1), jnp.float32)],
+        scratch_shapes=scratch,
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x2, mats, wq2, sw2, cw2)
+    return (out[:m, :d].reshape(*lead, d),
+            resid[:m].reshape(*lead, 1))
+
+
 def _quant_dot_experts_kernel(x_ref, mats_ref, wq_ref, sw_ref, o_ref,
                               q_ref, s_ref, *, n: int, mode: str,
                               compute_dtype):
@@ -620,8 +842,77 @@ def _quant_dot_experts_kernel_streamed(x_ref, mats_ref, wq_hbm, sw_hbm,
     o_ref[0] = (acc * s_ref[...] * sw_ring[slot]).astype(o_ref.dtype)
 
 
+def _quant_dot_experts_kernel_abft(x_ref, mats_ref, wq_ref, sw_ref, cw_ref,
+                                   o_ref, r_ref, q_ref, s_ref, chk_ref,
+                                   acc_ref, *, n: int, mode: str,
+                                   compute_dtype):
+    """Rotate-once 3-D expert grid step + ABFT: the dense verified
+    kernel with every ref carrying a leading per-expert axis of 1 and
+    the checksum tile sliced per CURRENT expert. j restarts per
+    (expert, row block), so the j == 0 re-stash also re-zeroes the
+    accumulator and re-derives chk against that expert's checksum."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _rotate():
+        q, s = _rotate_quantize_block(x_ref[0], mats_ref, n=n, mode=mode,
+                                      compute_dtype=compute_dtype)
+        op = _operand_from_q(q, mode)
+        q_ref[...] = op
+        s_ref[...] = s
+        chk_ref[...] = _abft_check_col(op, cw_ref[0])
+        acc_ref[...] = jnp.zeros_like(acc_ref[...])
+
+    acc = _operand_dot(q_ref[...], wq_ref[0], mode)
+    contrib = acc * s_ref[...] * sw_ref[0]
+    o_ref[0] = contrib.astype(o_ref.dtype)
+    acc_ref[...] += jnp.sum(contrib, axis=-1, keepdims=True)
+    r_ref[0] = acc_ref[...] - s_ref[...] * chk_ref[...]
+
+
+def _quant_dot_experts_kernel_streamed_abft(x_ref, mats_ref, wq_hbm, sw_hbm,
+                                            cw_ref, o_ref, r_ref, q_ref,
+                                            s_ref, chk_ref, acc_ref, w_ring,
+                                            sw_ring, w_sem, s_sem, *, n: int,
+                                            mode: str, compute_dtype,
+                                            bn: int, nj: int):
+    """Streamed 3-D expert grid step + ABFT: DMA ring per (expert, row
+    block) exactly as the unverified streamed kernel; the per-expert
+    checksum tile arrives through the plain BlockSpec pipeline (outside
+    the ring) so ring mis-delivery is detectable."""
+    e, j = pl.program_id(0), pl.program_id(2)
+
+    def make_w(slot, jj):
+        return pltpu.make_async_copy(
+            wq_hbm.at[e, :, pl.ds(jj * bn, bn)], w_ring.at[slot],
+            w_sem.at[slot])
+
+    def make_s(slot, jj):
+        return pltpu.make_async_copy(
+            sw_hbm.at[e, :, pl.ds(jj * bn, bn)], sw_ring.at[slot],
+            s_sem.at[slot])
+
+    finish = _ring_dmas(make_w, make_s, j, nj)
+
+    @pl.when(j == 0)
+    def _rotate():
+        q, s = _rotate_quantize_block(x_ref[0], mats_ref, n=n, mode=mode,
+                                      compute_dtype=compute_dtype)
+        op = _operand_from_q(q, mode)
+        q_ref[...] = op
+        s_ref[...] = s
+        chk_ref[...] = _abft_check_col(op, cw_ref[0])
+        acc_ref[...] = jnp.zeros_like(acc_ref[...])
+
+    slot = finish()
+    acc = _operand_dot(q_ref[...], w_ring[slot], mode)
+    contrib = acc * s_ref[...] * sw_ring[slot]
+    o_ref[0] = contrib.astype(o_ref.dtype)
+    acc_ref[...] += jnp.sum(contrib, axis=-1, keepdims=True)
+    r_ref[0] = acc_ref[...] - s_ref[...] * chk_ref[...]
+
+
 def pallas_quant_dot_experts(x, wq, sw, plan, interpret: bool,
-                             schedule=None, block_n=None):
+                             schedule=None, block_n=None, check=None):
     """Fused rotate+quantize+GEMM for stacked expert weights: ONE kernel
     over a 3-D (expert, row blocks, out-channel blocks) grid with the
     rotate-once schedule per (expert, row block) -- replacing the PR-4
@@ -632,12 +923,18 @@ def pallas_quant_dot_experts(x, wq, sw, plan, interpret: bool,
     expert weights; sw: (E, 1, d) f32 per-(expert, out-channel) scales.
     Returns (..., E, c, d) in the plan's io dtype.
 
-    ``schedule``/``block_n`` behave exactly as in :func:`pallas_quant_dot`
-    (the streamed DMA ring applies per (expert, row block) pair).
+    ``schedule``/``block_n``/``check`` behave exactly as in
+    :func:`pallas_quant_dot` (the streamed DMA ring applies per
+    (expert, row block) pair; ``check`` is the stacked (E, 1, n) f32
+    per-expert column checksum and makes the return value
+    ``(out, resid)`` with resid shaped (..., E, c, 1)).
     """
-    return _pallas_quant_dot_experts(x, wq, sw, plan, interpret,
-                                     _resolve_schedule(schedule, interpret),
-                                     block_n)
+    sched = _resolve_schedule(schedule, interpret)
+    if check is None:
+        return _pallas_quant_dot_experts(x, wq, sw, plan, interpret, sched,
+                                         block_n)
+    return _pallas_quant_dot_experts_abft(x, wq, sw, check, plan, interpret,
+                                          sched, block_n)
 
 
 @functools.partial(jax.jit, static_argnames=("plan", "interpret", "schedule",
@@ -704,6 +1001,115 @@ def _pallas_quant_dot_experts(x, wq, sw, plan, interpret: bool,
     )(x3, mats, wq3, sw3)
     out = jnp.moveaxis(out[:, :m, :d].reshape(E, -1, cap, d), 0, 1)
     return out.reshape(*lead, E, cap, d)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "interpret", "schedule",
+                                             "block_n"))
+def _pallas_quant_dot_experts_abft(x, wq, sw, cw, plan, interpret: bool,
+                                   schedule: str, block_n):
+    """The checksum-verified twin of :func:`_pallas_quant_dot_experts`
+    (see ``_pallas_quant_dot_abft`` for why it is a separate traced
+    function): per-expert (1, 1, n) checksum tiles, (E, mp, 1) residual
+    output revisited across the sequential j axis."""
+    TRACE_COUNTS[("pallas", "quant_dot_experts")] += 1
+    TRACE_COUNTS[("abft", "kernel_resid_trace")] += 1
+    n = plan.p
+    mode = plan.epilogue.mode
+    cd = jnp.dtype(plan.compute_dtype)
+    mats = _plan_mats(plan)
+    E, _, d = wq.shape
+    lead, cap = x.shape[:-3], x.shape[-2]
+    x3 = jnp.moveaxis(x.reshape(-1, E, cap, n), 1, 0).reshape(E, -1, n)
+    m = x3.shape[1]
+    sw3 = sw.reshape(E, 1, d).astype(jnp.float32)
+    cw3 = cw.reshape(E, 1, n).astype(jnp.float32)
+    bm, bn = quant_dot_blocks(n, d, m, x.dtype, cd, mode,
+                              block_m=plan.block_m, block_n=block_n,
+                              schedule=schedule, abft=True)
+    pad_m, pad_d = (-m) % bm, (-d) % bn
+    if pad_m:
+        x3 = jnp.pad(x3, ((0, 0), (0, pad_m), (0, 0)))
+    wq3 = wq
+    if pad_d:
+        wq3 = jnp.pad(wq, ((0, 0), (0, 0), (0, pad_d)))
+        sw3 = jnp.pad(sw3, ((0, 0), (0, 0), (0, pad_d)))
+    mp, dp = m + pad_m, d + pad_d
+    scratch = [pltpu.VMEM((bm, n), _scratch_dtype(mode)),
+               pltpu.VMEM((bm, 1), jnp.float32),
+               pltpu.VMEM((bm, 1), jnp.float32),     # chk
+               pltpu.VMEM((bm, 1), jnp.float32)]     # acc
+    wq_spec = pl.BlockSpec((1, n, bn), lambda e, i, j: (e, 0, j))
+    sw_spec = pl.BlockSpec((1, 1, bn), lambda e, i, j: (e, 0, j))
+    if schedule == "streamed":
+        kernel = functools.partial(_quant_dot_experts_kernel_streamed_abft,
+                                   n=n, mode=mode, compute_dtype=cd,
+                                   bn=bn, nj=dp // bn)
+        scratch += [pltpu.VMEM((2, n, bn), wq3.dtype),     # weight ring
+                    pltpu.VMEM((2, 1, bn), jnp.float32),   # scale ring
+                    pltpu.SemaphoreType.DMA((2,)),         # weight sems
+                    pltpu.SemaphoreType.DMA((2,))]         # scale sems
+        wq_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+        sw_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+    else:
+        kernel = functools.partial(_quant_dot_experts_kernel_abft, n=n,
+                                   mode=mode, compute_dtype=cd)
+    out, resid = pl.pallas_call(
+        kernel,
+        grid=(E, mp // bm, dp // bn),
+        in_specs=[
+            pl.BlockSpec((1, bm, n), lambda e, i, j: (e, i, 0)),
+            pl.BlockSpec((mats.shape[0],) + mats.shape[1:],
+                         lambda e, i, j: (0, 0, 0)),
+            wq_spec,
+            sw_spec,
+            pl.BlockSpec((1, 1, n), lambda e, i, j: (e, 0, 0)),
+        ],
+        out_specs=[pl.BlockSpec((1, bm, bn), lambda e, i, j: (e, i, j)),
+                   pl.BlockSpec((1, bm, 1), lambda e, i, j: (e, i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((E, mp, dp), jnp.dtype(plan.dtype)),
+                   jax.ShapeDtypeStruct((E, mp, 1), jnp.float32)],
+        scratch_shapes=scratch,
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x3, mats, wq3, sw3, cw3)
+    out = jnp.moveaxis(out[:, :m, :d].reshape(E, -1, cap, d), 0, 1)
+    r = jnp.moveaxis(resid[:, :m].reshape(E, -1, cap, 1), 0, 1)
+    return out.reshape(*lead, E, cap, d), r.reshape(*lead, E, cap, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "interpret"))
+def xla_quant_dot_resid(x, wq, sw, cw, plan, interpret: bool):
+    """The unfused ABFT residual oracle for dispatches that do not run
+    the fused kernel (xla backend, above-cap sizes): re-derive the
+    rotated/quantized activation with the SAME transform+quantize ops as
+    :func:`xla_quant_dot`, recompute the weight's column checksum from
+    the LIVE weight with the exact ``wquant.weight_checksum`` op order,
+    and contract the activation against the checksum DIFFERENCE:
+
+        resid = s * (q . (recomputed_cw - stored_cw))
+
+    Healthy weights make the difference bitwise zero (same arrays, same
+    reduction), so the residual is exactly 0.0 per row; any mutation of
+    ``wq``/``sw`` since quantize time shows up as the corruption
+    magnitude times the activation row. Costs one extra transform of x
+    -- the documented price of verifying the path that cannot carry the
+    in-kernel checksum column. Returns (..., 1) f32."""
+    from repro.core.api import _dispatch_transform, _strip
+
+    TRACE_COUNTS[("abft", "xla_resid_trace")] += 1
+    n, d = wq.shape
+    # Same transform dispatch as the unfused oracle (grouped plans block
+    # the rotation over p-wide groups; a flat reshape would be wrong).
+    y = _dispatch_transform(x, _strip(plan), interpret)
+    epi = plan.epilogue
+    q, s = _quantize_rows(y.astype(jnp.float32), epi.mode,
+                          axis=-1 if epi.per_token else None)
+    sw2 = sw.reshape(1, d).astype(jnp.float32)
+    cwt = (wq.astype(jnp.float32) * sw2).sum(axis=-1)
+    dvec = cwt - cw.reshape(n)
+    resid = jnp.einsum("...k,k->...", q.astype(jnp.float32), dvec)[..., None]
+    return jnp.asarray(s, jnp.float32) * resid
 
 
 @functools.partial(jax.jit, static_argnames=("plan", "interpret"))

@@ -415,18 +415,22 @@ class PallasBackend(Backend):
     def fused_dequant(self, x, plan, interpret):
         return _pallas_fused_dequant(x, plan, interpret)
 
-    def quant_dot(self, x, wq, sw, plan, interpret, schedule=None):
-        # lazy import: quant_dot.py imports this module at load time
+    def quant_dot(self, x, wq, sw, plan, interpret, schedule=None,
+                  check=None):
+        # lazy import: quant_dot.py imports this module at load time.
+        # ``check`` (ABFT column checksum) switches to the verified
+        # kernel variant and the return value becomes (out, resid).
         from repro.kernels.quant_dot import pallas_quant_dot
 
         return pallas_quant_dot(x, wq, sw, plan, interpret,
-                                schedule=schedule)
+                                schedule=schedule, check=check)
 
-    def quant_dot_experts(self, x, wq, sw, plan, interpret, schedule=None):
+    def quant_dot_experts(self, x, wq, sw, plan, interpret, schedule=None,
+                          check=None):
         from repro.kernels.quant_dot import pallas_quant_dot_experts
 
         return pallas_quant_dot_experts(x, wq, sw, plan, interpret,
-                                        schedule=schedule)
+                                        schedule=schedule, check=check)
 
 
 # -------------------------------------------------------------------- xla

@@ -11,6 +11,11 @@ lengths) and reports tokens/s, slot occupancy, p50/p99 per-token
 latency, and the admission/retirement/stall counters. All jit compiles
 are paid in a warm-up step before the first request, so the reported
 latencies are steady-state.
+
+``REPRO_ABFT=1`` serves checksum-VERIFIED steps (silent-data-corruption
+detection; ``repro.verify``, DESIGN.md section 14); the run's health
+counters -- guard/ABFT trips, degradations, SDC retirements -- print as
+the structured ``health`` line of the summary.
 """
 from __future__ import annotations
 
@@ -128,6 +133,8 @@ def main(argv=None):
           f"{s.get('watchdog_trips', 0):.0f} degrades="
           f"{s.get('degrades', 0):.0f} rung={s.get('rung', 0):.0f} "
           f"guards={'on' if s.get('guards_enabled') else 'off'})")
+    h = s["health"]
+    print("health: " + " ".join(f"{k}={v}" for k, v in h.items()))
     print(f"invariants: decode_executables={s['decode_executables']:.0f} "
           f"(constant across admissions/retirements), "
           f"quantize_weight_calls={s['quantize_weight_calls']:.0f} "

@@ -164,7 +164,16 @@ def make_serve_step(cfg: ModelConfig, guard: bool = False):
     Same arity and out-structure as the unguarded step so
     ``jit_serve_step`` is shared; the tokens are bitwise identical
     (guards observe, never perturb healthy values -- asserted in
-    tests/test_faults.py)."""
+    tests/test_faults.py).
+
+    ABFT serving (``repro.verify``, DESIGN.md section 14) reuses this
+    guarded step UNCHANGED: the kernel checksum residual surfaces as
+    NaN-poisoned logit rows in the ok-vector, and the KV conservation
+    check runs as separate ``verify.kv_check``/``kv_roll`` executables
+    the engine dispatches around this one -- folding a whole-cache read
+    into the donated decode program would force defensive copies of the
+    donated cache buffers (see ``verify.kv_check``)."""
+
     def serve_step(params, caches, tokens, cache_pos):
         logits, new_caches = lm_decode_step(cfg, params, caches, tokens, cache_pos)
         new_tokens = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]

@@ -53,6 +53,23 @@ Robustness layer (PR 8, DESIGN.md section 12):
     poisoned tokens. Guard-off and guard-on runs are bitwise identical
     on healthy requests (guards observe, never perturb).
 
+ABFT layer (PR 10, DESIGN.md section 14): with ``REPRO_ABFT=1`` (or
+``QuantConfig.abft``) the engine serves checksum-VERIFIED steps --
+silent-data-corruption detection for finite-but-wrong values the
+isfinite guards cannot see. Weight checksums are attached at init
+(``verify.with_checks``); the fused quant_dot kernels verify their own
+outputs in-kernel and NaN-poison failing rows into the logits seam; the
+decode step carries a per-slot KV conservation state (fifth jit
+argument, donated) that recomputes and cross-checks the cache sums
+every step. A tripped slot retires as ``sdc_detected``
+(``Completion.status`` 'degraded') -- KV trips attribute directly,
+logits trips attribute by re-verifying the stored weight checksums
+against the live weights (corrupt -> ``sdc_detected``, clean ->
+``nan_guard``). Two detections within ``_SDC_WINDOW_STEPS`` re-warm
+the degradation ladder one rung. Healthy ABFT-on runs are bitwise
+identical to ABFT-off (exact selects only; asserted in
+tests/test_faults.py).
+
 Fault injection (tests): ``repro.testing.faults`` installs a context-
 scoped ``FaultPlan`` the engine polls at each decode dispatch --
 synthetic kernel raises, artificial step latency, NaN pokes into live
@@ -64,14 +81,16 @@ steady-state (the same fix applied to ``serve.py``'s timed loop).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import verify
 from repro.core import guards, wquant
 from repro.distributed import sharding as shd
 from repro.kernels.registry import TRACE_COUNTS, warn_once
@@ -83,6 +102,22 @@ from repro.serving.scheduler import Completion, Request, Scheduler
 from repro.testing import faults
 
 _SUPPORTED_KINDS = ("attn", "moe")
+
+# TRACE_COUNTS keys snapshotted at engine construction so ``health()``
+# can report per-engine deltas of the process-global counters.
+_HEALTH_TRACE_KEYS = (
+    ("abft", "kv_trip"),
+    ("abft", "sdc_detected"),
+    ("abft", "params_check"),
+    ("serving", "guard_trip"),
+    ("serving", "watchdog_trip"),
+    ("serving", "step_retry"),
+    ("serving", "deadline_retire"),
+)
+
+# ABFT degradation window: >= 2 SDC detections within this many engine
+# steps re-warm the ladder one rung (sustained corruption, not a blip).
+_SDC_WINDOW_STEPS = 16
 
 
 def _validate_config(cfg: ModelConfig) -> None:
@@ -177,6 +212,25 @@ class ServeEngine:
                                max_queue=max_queue)
         self._rules_overrides = rules_overrides
         self._guard = guards.guards_enabled()
+        self._abft = (bool(getattr(cfg.quant, "abft", False))
+                      or verify.abft_enabled())
+        if self._abft:
+            # weights quantized without checksums (abft switched on after
+            # load) get them attached here, once; check-carrying leaves
+            # pass through verbatim
+            self.params = verify.with_checks(self.params)
+            self._kv_reset = jax.jit(verify.kv_slot_reset,
+                                     donate_argnums=(0,))
+            # the KV conservation check is deliberately NOT folded into
+            # the decode executable: that program donates its cache
+            # operands, and a whole-cache read inside it forces XLA to
+            # defensively copy the donated buffers (see verify.kv_check)
+            self._kv_check = jax.jit(verify.kv_check)
+            self._kv_roll = jax.jit(verify.kv_roll)
+        self._sdc_trips: collections.deque = collections.deque(maxlen=8)
+        self._params_check_step = -1
+        self._params_check_ok = True
+        self._trace_base = {k: TRACE_COUNTS[k] for k in _HEALTH_TRACE_KEYS}
         self._watchdog_ms = watchdog_ms
         self._watchdog_skip = 0       # steps exempted after a re-warm
         self._consec_slow = 0
@@ -196,6 +250,12 @@ class ServeEngine:
         cs = self._decode_shardings[1]
         self.caches = jax.device_put(
             alloc_kv_caches(cfg, num_slots, max_len), cs)
+        # ABFT KV conservation state: per-slot [sum, abs_sum] over the
+        # slot's valid rows, carried across steps and checked/rolled by
+        # the kv_check/kv_roll executables dispatched around each decode
+        # (repro.verify, DESIGN.md section 14)
+        self.kv_sums = (jnp.zeros((num_slots, 2), jnp.float32)
+                        if self._abft else None)
         self.tokens_h = np.zeros((num_slots, 1), np.int32)
         self.positions_h = np.zeros((num_slots,), np.int32)
 
@@ -221,12 +281,17 @@ class ServeEngine:
         (lazily compiled on first call, as all jax.jit wrappers are)."""
         cfg = self._ladder[i]
         self._rung = i
-        self._prefill = jax.jit(
-            self._in_rules(_make_prefill_fn(cfg, guard=self._guard)))
+        # ABFT implies the guarded prefill/decode seam: the kernel
+        # checksum residual surfaces as NaN-poisoned logit rows there,
+        # and the decode executable itself stays the plain guarded step
+        # (the KV check rides in separate kv_check/kv_roll programs)
+        self._prefill = jax.jit(self._in_rules(
+            _make_prefill_fn(cfg, guard=self._guard or self._abft)))
         self._decode, self._decode_shardings = jit_serve_step(
             cfg, self.sched.num_slots, self.max_len, self.mesh,
             rules_overrides=self._rules_overrides,
-            donate=True, per_slot=True, guard=self._guard)
+            donate=True, per_slot=True,
+            guard=self._guard or self._abft)
         self._decode_jits.append(self._decode)
 
     # ---------------------------------------------------------- warm-up
@@ -247,6 +312,13 @@ class ServeEngine:
         new_tok, _, self.caches = self._decode(
             self.params, self.caches, jnp.asarray(self.tokens_h),
             jnp.asarray(self.positions_h))
+        if self._abft:
+            # compile the conservation-check executables too (positions
+            # are all zero -> zero valid rows, so the warmup's garbage
+            # KV writes are invisible to the sums and ok is all-True)
+            pos = jnp.zeros((self.sched.num_slots,), jnp.int32)
+            _, cur = self._kv_check(self.caches, pos, self.kv_sums)
+            jax.block_until_ready(self._kv_roll(self.caches, pos, cur))
         jax.block_until_ready(new_tok)
         self._compile_s = time.perf_counter() - t0
         # everything past this point is steady-state serving
@@ -318,15 +390,23 @@ class ServeEngine:
         t0 = time.perf_counter()
         out = self._prefill(self.params, {"tokens": jnp.asarray(padded)},
                             jnp.asarray(req.prompt_len, jnp.int32))
-        if self._guard:
+        if self._guard or self._abft:
             tok, ok, kv = out
             if not bool(np.asarray(ok)[0]):
                 # poisoned prefill: never insert, never emit -- retire
-                # the freshly admitted slot as degraded on the spot
-                self.sched.counters["guard_trips"] += 1
-                TRACE_COUNTS[("serving", "guard_trip")] += 1
+                # the freshly admitted slot as degraded on the spot.
+                # With ABFT on, attribute first: a stale weight checksum
+                # means silent corruption (sdc_detected), a clean one a
+                # transient numeric event (nan_guard).
+                reason = "nan_guard"
+                if self._abft and self._weights_corrupt():
+                    reason = "sdc_detected"
+                    self._note_sdc()
+                else:
+                    self.sched.counters["guard_trips"] += 1
+                    TRACE_COUNTS[("serving", "guard_trip")] += 1
                 self.completions.append(self.sched.retire(
-                    slot, "nan_guard", float(self.step)))
+                    slot, reason, float(self.step)))
                 return
         else:
             tok, kv = out
@@ -342,6 +422,14 @@ class ServeEngine:
         st.latencies_ms.append(dt_ms)
         self.tokens_h[slot, 0] = tok_h
         self.positions_h[slot] = st.pos
+        if self._abft:
+            # rebase the slot's conservation state from the freshly
+            # inserted KV block (insert rewrites the block wholesale);
+            # blocked so this cache read cannot still be in flight when
+            # the next decode donates the buffers it walks
+            self.kv_sums = jax.block_until_ready(self._kv_reset(
+                self.kv_sums, self.caches, jnp.asarray(slot, jnp.int32),
+                jnp.asarray(int(st.pos), jnp.int32)))
         self._maybe_retire(slot, tok_h)
 
     def _maybe_retire(self, slot: int, last_tok: int) -> bool:
@@ -400,18 +488,30 @@ class ServeEngine:
             self._decode_step()
         return self.completions
 
+    def _inject_faults(self) -> None:
+        """Apply this step's scheduled state corruptions (NaN pokes,
+        silent bit flips / row perturbations / tile clobbers) at the TOP
+        of the step, before the ABFT kv_check reads the caches -- so a
+        corruption landing at step N is detectable at step N, exactly
+        like a cosmic-ray flip that happened between dispatches."""
+        plan = faults.active()
+        if plan is None:
+            return
+        if plan.should_poke(self.step):
+            row = int(self.positions_h[plan.nan_poke_slot]) - 1
+            if row >= 0:
+                self.caches = faults.poke_nan(
+                    self.caches, plan.nan_poke_slot, row)
+        if plan.should_corrupt(self.step):
+            self._inject_corruption(plan)
+
     def _dispatch_decode(self):
-        """One decode dispatch at the current rung, with fault hooks at
-        the host boundary: an injected raise fires BEFORE the jitted
-        call, so the donated caches were not consumed and a retry runs
-        on intact state."""
+        """One decode dispatch at the current rung, with the per-attempt
+        fault hooks at the host boundary: an injected raise fires BEFORE
+        the jitted call, so the donated caches were not consumed and a
+        retry runs on intact state."""
         plan = faults.active()
         if plan is not None:
-            if plan.should_poke(self.step):
-                row = int(self.positions_h[plan.nan_poke_slot]) - 1
-                if row >= 0:
-                    self.caches = faults.poke_nan(
-                        self.caches, plan.nan_poke_slot, row)
             d = plan.delay_s(self.step)
             if d > 0.0:
                 time.sleep(d)
@@ -419,6 +519,24 @@ class ServeEngine:
         return self._decode(
             self.params, self.caches, jnp.asarray(self.tokens_h),
             jnp.asarray(self.positions_h))
+
+    def _inject_corruption(self, plan) -> None:
+        """Apply a scheduled SILENT corruption at the host boundary
+        (params are never donated; the cache write goes through the same
+        functional update path as ``poke_nan``)."""
+        if plan.corrupt_kind == "weight":
+            self.params = faults.flip_weight_bit(self.params,
+                                                 bit=plan.corrupt_bit)
+        elif plan.corrupt_kind == "kv":
+            row = int(self.positions_h[plan.kv_corrupt_slot]) - 1
+            if row >= 0:
+                self.caches = faults.perturb_kv_row(
+                    self.caches, plan.kv_corrupt_slot, row)
+        elif plan.corrupt_kind == "tile":
+            self.params = faults.clobber_stream_tile(self.params)
+        else:
+            raise ValueError(
+                f"unknown corrupt_kind {plan.corrupt_kind!r}")
 
     def _decode_with_recovery(self):
         """Dispatch; on failure retry ONCE on the same rung (transient
@@ -441,15 +559,73 @@ class ServeEngine:
                 continue
         return None
 
+    # -------------------------------------------------------------- abft
+    def _weights_corrupt(self) -> bool:
+        """On-demand weight attribution after a logits-level trip: do the
+        live weights still match their stored ABFT checksums? Cached per
+        engine step so one corrupted step verifies the tree once however
+        many slots tripped."""
+        if self._params_check_step != self.step:
+            self._params_check_step = self.step
+            TRACE_COUNTS[("abft", "params_check")] += 1
+            self._params_check_ok = verify.params_ok(self.params)
+        return not self._params_check_ok
+
+    def _note_sdc(self) -> None:
+        """Record an SDC detection; sustained detections (>= 2 within
+        ``_SDC_WINDOW_STEPS`` engine steps) feed the degradation ladder:
+        if the corruption lives in one rung's machinery (a sick kernel
+        path, a bad stream buffer) the re-warm clears it, and if not the
+        ladder eventually exhausts and fails loudly -- never silently."""
+        TRACE_COUNTS[("abft", "sdc_detected")] += 1
+        self.sched.counters["sdc_retired"] += 1
+        self._sdc_trips.append(self.step)
+        recent = [s for s in self._sdc_trips
+                  if self.step - s <= _SDC_WINDOW_STEPS]
+        if len(recent) >= 2:
+            self._sdc_trips.clear()
+            self._degrade("repeated ABFT SDC detections")
+
+    def _abft_rebase_slot(self, slot: int) -> None:
+        """Re-anchor one slot's KV conservation state to the cache as it
+        is NOW, over the slot's current row count. Called when a slot is
+        retired mid-trip (its position stops advancing, so the carried
+        sum+delta rollforward would drift from the recompute) -- after
+        this, a dead slot verifies trivially until reuse rebases it
+        again at insert."""
+        self.kv_sums = jax.block_until_ready(self._kv_reset(
+            self.kv_sums, self.caches, jnp.asarray(slot, jnp.int32),
+            jnp.asarray(int(self.positions_h[slot]), jnp.int32)))
+
     def _decode_step(self) -> None:
         t0 = time.perf_counter()
+        self._inject_faults()
+        kv_ok = cur = pos = None
+        if self._abft:
+            # pre-decode integrity gate on the exact caches the donated
+            # step is about to consume. block_until_ready serializes the
+            # read against the donated in-place reuse: an async-pending
+            # whole-cache read racing a donation is a runtime conflict,
+            # not a dataflow edge
+            pos = jnp.asarray(self.positions_h)
+            kv_ok, cur = self._kv_check(self.caches, pos, self.kv_sums)
+            jax.block_until_ready(cur)
         out = self._decode_with_recovery()
         if out is None:
             self._fail_inflight("decode failed on every ladder rung")
             return
         new_tok, mid, self.caches = out
+        ok_h = np.asarray(mid) if (self._guard or self._abft) else None
+        kv_ok_h = None
+        if self._abft:
+            # roll the conservation state over the one row the step just
+            # wrote per slot (at the pre-step positions); blocked for the
+            # same reason as the pre-step check -- the NEXT step donates
+            # the cache buffers this read walks
+            self.kv_sums = jax.block_until_ready(
+                self._kv_roll(self.caches, pos, cur))
+            kv_ok_h = np.asarray(kv_ok)
         new_tok_h = np.asarray(new_tok)           # blocks until ready
-        ok_h = np.asarray(mid) if self._guard else None
         dt_ms = (time.perf_counter() - t0) * 1e3
         self._decode_s += dt_ms * 1e-3
         self._step_latencies_ms.append(dt_ms)
@@ -458,13 +634,31 @@ class ServeEngine:
         self._watchdog(dt_ms)
         for slot in sorted(self.sched.active):
             st = self.sched.active[slot]
-            if ok_h is not None and not bool(ok_h[slot]):
-                # numeric guard tripped this slot: retire as degraded
-                # instead of emitting a poisoned token
-                self.sched.counters["guard_trips"] += 1
-                TRACE_COUNTS[("serving", "guard_trip")] += 1
+            if kv_ok_h is not None and not bool(kv_ok_h[slot]):
+                # KV conservation broke with finite values: silent
+                # corruption of already-written cache rows, attributed
+                # directly (the NaN case routes to the logits guard)
+                TRACE_COUNTS[("abft", "kv_trip")] += 1
+                self._note_sdc()
                 self.completions.append(self.sched.retire(
-                    slot, "nan_guard", float(self.step)))
+                    slot, "sdc_detected", float(self.step)))
+                self._abft_rebase_slot(slot)
+                continue
+            if ok_h is not None and not bool(ok_h[slot]):
+                # logits-level trip: NaN from a numeric event OR the
+                # kernel checksum's NaN-poisoned rows. With ABFT on,
+                # attribute by re-verifying the weight checksums.
+                reason = "nan_guard"
+                if self._abft and self._weights_corrupt():
+                    reason = "sdc_detected"
+                    self._note_sdc()
+                else:
+                    self.sched.counters["guard_trips"] += 1
+                    TRACE_COUNTS[("serving", "guard_trip")] += 1
+                self.completions.append(self.sched.retire(
+                    slot, reason, float(self.step)))
+                if self._abft:
+                    self._abft_rebase_slot(slot)
                 continue
             tok = int(new_tok_h[slot, 0])
             st.generated.append(tok)
@@ -508,7 +702,33 @@ class ServeEngine:
         path (QTensor weights are consumed directly)."""
         return wquant.QUANTIZE_WEIGHT_CALLS - self._qw_calls_baseline
 
-    def summary(self) -> Dict[str, float]:
+    def health(self) -> Dict[str, int]:
+        """Structured robustness snapshot: the degradation / watchdog /
+        numeric-guard / ABFT counters for THIS engine. TRACE_COUNTS keys
+        are process-global, so they were snapshotted at construction and
+        are reported here as deltas; scheduler counters are already
+        per-engine."""
+        delta = {k: int(TRACE_COUNTS[k] - self._trace_base[k])
+                 for k in _HEALTH_TRACE_KEYS}
+        return {
+            "abft_enabled": int(self._abft),
+            "guards_enabled": int(self._guard),
+            "rung": int(self._rung),
+            "degrades": int(self.sched.counters.get("degrades", 0)),
+            "watchdog_trips": int(
+                self.sched.counters.get("watchdog_trips", 0)),
+            "step_retries": int(self.sched.counters.get("step_retries", 0)),
+            "deadline_retired": int(
+                self.sched.counters.get("deadline_retired", 0)),
+            "nan_guard_trips": int(
+                self.sched.counters.get("guard_trips", 0)),
+            "sdc_retired": int(self.sched.counters.get("sdc_retired", 0)),
+            "abft_kv_trips": delta[("abft", "kv_trip")],
+            "abft_sdc_detections": delta[("abft", "sdc_detected")],
+            "abft_params_checks": delta[("abft", "params_check")],
+        }
+
+    def summary(self) -> Dict[str, Any]:
         # per-token latencies: decode-produced tokens only (index 0 is the
         # prefill-produced first token, whose cost is the admission)
         lat = np.asarray([ms for c in self.completions
@@ -537,6 +757,8 @@ class ServeEngine:
                                           self.max_len),
             "rung": self._rung,
             "guards_enabled": int(self._guard),
+            "abft_enabled": int(self._abft),
+            "health": self.health(),
             **{f"status_{k}": v for k, v in sorted(by_status.items())},
             **{k: int(v) for k, v in self.sched.counters.items()},
         }

@@ -92,6 +92,7 @@ STATUS_OF_REASON = {
     "deadline_shed": "timed_out",   # shed from the queue, never admitted
     "queue_full": "rejected",       # bounded-queue backpressure
     "nan_guard": "degraded",        # numeric guard tripped the slot
+    "sdc_detected": "degraded",     # ABFT checksum caught silent corruption
     "engine_failed": "degraded",    # step failed beyond the ladder
     "shed_engine_failed": "degraded",  # queued when the ladder ran out
 }

@@ -24,6 +24,13 @@ Faults are injected at the HOST dispatch boundary, on purpose:
     fault stays request-local.
   * ``delay_s`` sleeps on the host around the step, simulating a stuck
     device/step for the watchdog without touching numerics.
+  * the SILENT injectors (``flip_weight_bit``, ``perturb_kv_row``,
+    ``clobber_stream_tile``; scheduled via ``corrupt_at_step``) mutate
+    live weights/KV with finite wrong values -- invisible to every
+    isfinite guard by construction. They close the fault-model gap the
+    ABFT layer (``repro.verify``, DESIGN.md section 14) exists for: a
+    run with ``REPRO_ABFT=1`` must detect them, a guards-only run must
+    NOT (that contrast is asserted in tests/test_faults.py).
 
 Activation is context-scoped (``with inject(plan): ...``) so a leaked
 fault can never outlive a test; the engine polls the module-level
@@ -45,6 +52,9 @@ __all__ = [
     "inject",
     "active",
     "poke_nan",
+    "flip_weight_bit",
+    "perturb_kv_row",
+    "clobber_stream_tile",
     "arrival_flood",
 ]
 
@@ -67,6 +77,16 @@ class FaultPlan:
         Trips the decode watchdog.
     nan_poke_step / nan_poke_slot: before dispatching this step, write
         NaN into the target slot's most recent KV row.
+    corrupt_at_step / corrupt_kind: SILENT corruption -- every injected
+        value stays finite, so the isfinite numeric guards never fire
+        and only the ABFT checksum layer (``repro.verify``) can catch
+        it. 'weight' flips ``corrupt_bit`` of one element of a live
+        QTensor ``q`` leaf (a single-event upset in the weight HBM);
+        'kv' overwrites the target slot's most recent KV row with a
+        large finite value; 'tile' zeroes a 128-wide out-channel slab
+        of a weight leaf (the signature a mis-delivered weight-stream
+        DMA tile leaves behind). Fires once, at the first dispatch at
+        or after ``corrupt_at_step``.
     """
 
     kernel_raise_at_step: Optional[int] = None
@@ -75,9 +95,14 @@ class FaultPlan:
     delay_at_steps: Tuple[int, ...] = ()
     nan_poke_step: Optional[int] = None
     nan_poke_slot: int = 0
+    corrupt_at_step: Optional[int] = None
+    corrupt_kind: str = "weight"    # 'weight' | 'kv' | 'tile'
+    corrupt_bit: int = 6
+    kv_corrupt_slot: int = 0
 
     # mutable bookkeeping (reset by ``inject`` on entry)
     raises_done: int = 0
+    corrupt_done: bool = False
     log: List[Tuple[int, str]] = dataclasses.field(default_factory=list)
 
     # ---------------------------------------------------------- queries
@@ -106,6 +131,15 @@ class FaultPlan:
             return True
         return False
 
+    def should_corrupt(self, step: int) -> bool:
+        """One-shot silent-corruption trigger, polled at decode dispatch."""
+        if (self.corrupt_at_step is not None and not self.corrupt_done
+                and step >= self.corrupt_at_step):
+            self.corrupt_done = True
+            self.log.append((step, f"corrupt_{self.corrupt_kind}"))
+            return True
+        return False
+
 
 # One active plan, context-scoped. The engine reads it through
 # ``active()`` so tests never have to thread the plan into the engine.
@@ -121,6 +155,7 @@ def inject(plan: FaultPlan):
     """Scope in which the serving engine sees ``plan``. Resets the plan's
     mutable bookkeeping on entry; always clears the slot on exit."""
     plan.raises_done = 0
+    plan.corrupt_done = False
     plan.log = []
     prev, _ACTIVE[0] = _ACTIVE[0], plan
     try:
@@ -137,6 +172,100 @@ def poke_nan(caches, slot: int, row: int):
         return c.at[:, slot, row].set(jax.numpy.nan)
 
     return jax.tree.map(one, caches)
+
+
+def _map_first_qleaf(params, fn):
+    """Apply ``fn(QTensor) -> QTensor`` to the first CHECKSUM-COVERED
+    QTensor leaf of the tree: a rotation-consumer site (``w_down``),
+    which the serving forward contracts against q/scale directly through
+    the verified quant_dot every decode step. Corrupting one of these is
+    the fault ABFT exists to catch -- the stored column checksum goes
+    stale the moment the live ``q`` mutates. Other QTensors (attention
+    projections, embeddings) are dequantized into plain matmuls before
+    use, so an in-GEMM checksum never sees them -- only the host-side
+    ``verify.params_ok`` scan does -- and the embedding is only read at
+    the rows the stream happens to index, so corrupting it may silently
+    touch nothing at all. Falls back to stacked per-layer leaves, then
+    any QTensor; error when the tree has none."""
+    from repro.core import wquant
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=wquant.is_qleaf)
+    leaves = [t for _, t in flat]
+    idxs = [i for i, t in enumerate(leaves) if wquant.is_qleaf(t)]
+    if not idxs:
+        raise ValueError(
+            "params tree has no QTensor leaf to corrupt; build the model "
+            "with weight_quant='int8'")
+
+    def keys(i):
+        return [str(getattr(k, "key", getattr(k, "name", "")))
+                for k in flat[i][0]]
+
+    consumer = [i for i in idxs if wquant._is_consumer(keys(i))]
+    hot = [i for i in idxs if leaves[i].q.ndim >= 3]
+    pick = (consumer or hot or idxs)[0]
+    leaves[pick] = fn(leaves[pick])
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _replace_q(t, q_np):
+    """Rebuild a QTensor leaf around a host-mutated ``q`` array, keeping
+    the original device placement (and, crucially, the original stored
+    ABFT checksum -- the corruption must NOT update it)."""
+    import dataclasses as _dc
+
+    newq = jax.numpy.asarray(q_np)
+    if getattr(t.q, "sharding", None) is not None:
+        newq = jax.device_put(newq, t.q.sharding)
+    return _dc.replace(t, q=newq)
+
+
+def flip_weight_bit(params, *, bit: int = 6, flat_byte: Optional[int] = None):
+    """Flip one BIT of one element of the first QTensor weight leaf -- a
+    single-event upset in weight memory. The result is a finite, wrong
+    value: the isfinite guards cannot see it, the stored ABFT column
+    checksum (computed from the pre-flip weight and deliberately left
+    stale) can. ``flat_byte`` picks the byte (default: the middle of the
+    leaf); ``bit`` the bit within it."""
+    def fn(t):
+        q = np.array(jax.device_get(t.q))       # writable host copy
+        raw = q.view(np.uint8).reshape(-1)
+        idx = raw.size // 2 if flat_byte is None else flat_byte
+        raw[idx] ^= np.uint8(1 << bit)
+        return _replace_q(t, q)
+
+    return _map_first_qleaf(params, fn)
+
+
+def perturb_kv_row(caches, slot: int, row: int, value: float = 448.0):
+    """Overwrite ``row`` of ``slot`` with a large FINITE value across
+    every cache leaf -- silent KV corruption. 448 is fp8_e4m3's max
+    normal, so the write survives every cache dtype without becoming
+    inf/NaN; the numeric guards stay blind and only the ABFT KV
+    conservation check (``repro.verify.kv_sums_ok``) trips."""
+    def one(c):
+        return c.at[:, slot, row].set(jax.numpy.asarray(value, c.dtype))
+
+    return jax.tree.map(one, caches)
+
+
+def clobber_stream_tile(params, *, width: int = 128):
+    """Zero a ``width``-wide out-channel slab of the first QTensor weight
+    leaf -- the footprint a mis-delivered/aborted weight-stream DMA tile
+    leaves in memory (the streamed quant_dot schedule prefetches the
+    weight in (n, block_n) tiles). All-finite, guard-invisible; the ABFT
+    checksum column rides OUTSIDE the DMA ring precisely so this class
+    of fault stays detectable."""
+    def fn(t):
+        q = np.array(jax.device_get(t.q))
+        d = q.shape[-1]
+        w = min(width, d)
+        lo = max((d // 2) - w // 2, 0)
+        q[..., lo:lo + w] = 0
+        return _replace_q(t, q)
+
+    return _map_first_qleaf(params, fn)
 
 
 def arrival_flood(num: int, *, prompt_len: int, max_new_tokens: int,

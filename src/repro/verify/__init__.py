@@ -1,0 +1,22 @@
+"""Algorithm-based fault tolerance (ABFT) runtime verification.
+
+Opt-in (``REPRO_ABFT=1`` / ``QuantConfig.abft``) checksum verification of
+the fused rotate->quantize->GEMM path, the pure Hadamard rotation sites,
+and the serving KV cache -- silent-data-corruption detection for the
+faults the PR 8 numeric guards cannot see (finite-but-wrong values from
+weight bit-flips, KV row corruption, mis-DMA'd streamed tiles).
+DESIGN.md section 14."""
+from repro.verify.abft import (  # noqa: F401
+    ABFT_ENV,
+    abft_enabled,
+    abft_tolerance,
+    kv_check,
+    kv_roll,
+    kv_row_delta,
+    kv_slot_reset,
+    kv_sums_ok,
+    kv_tree_sums,
+    params_ok,
+    residual_ok,
+    with_checks,
+)

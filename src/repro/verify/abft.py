@@ -1,0 +1,238 @@
+"""ABFT primitives: checksum math, tolerances, and KV-cache integrity.
+
+The quantized GEMM ``y = (s * q) @ (W_q * s_w)`` is linear in the
+weight, so a single precomputed f32 vector -- the column checksum
+``check[k] = sum_d W_q[k, d] * s_w[d]`` stored on the :class:`QTensor`
+at ``quantize_weight`` time -- verifies every output row:
+
+    sum_d y[i, d]  ==  s[i] * sum_k q[i, k] * check[k]
+
+exactly in real arithmetic (checksums commute with contraction; Navarro
+et al., arXiv:2001.05585; Ootomo & Yokota, arXiv:2203.03341). The fused
+Pallas kernels accumulate the left side tile-by-tile alongside the real
+output and emit the per-row RESIDUAL (left minus right) as a second
+kernel output; the unfused XLA path recomputes ``check`` from the live
+weight with the identical op order and contracts the difference. Either
+way a healthy run's residual is float-rounding small, while a corrupted
+weight element, a mis-DMA'd tile, or a broken accumulation shifts it by
+the (large) corruption magnitude times the activation -- every affected
+output row trips, and ONLY affected rows trip.
+
+Tolerance: both residual sides are f32 summation chains of ~(n + d)
+terms over the same values, so their difference is bounded by
+C * eps_f32 * sqrt(n + d) relative to the row's absolute output mass
+(sqrt because rounding errors of random-signed terms cancel; C = 4 is
+calibrated with ~500x headroom over the measured healthy worst case --
+see ``abft_tolerance``). The bound is mode-independent -- int8 tiles
+accumulate exactly in int32 and the fp8 grids embed exactly in bf16, so
+quantization contributes no error to the COMPARISON (both sides see the
+same quantized values); it is property-tested across 3 modes x
+f32/bf16/fp16 x all schedules in tests/test_abft.py.
+
+KV-cache integrity is a running per-slot conservation law: the engine
+carries ``[sum, abs_sum]`` over each slot's valid rows and the decode
+step recomputes it from the cache it was handed -- any off-path mutation
+of already-written rows (bit flips, buffer clobbers) breaks the match.
+Non-finite mismatches are deliberately NOT flagged here: NaN/Inf already
+announce themselves through the logits guard seam (``core.guards``), and
+keeping the channels separate is what lets the engine attribute a trip
+to silent corruption vs. numeric overflow (DESIGN.md section 14).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import wquant
+
+__all__ = [
+    "ABFT_ENV",
+    "abft_enabled",
+    "abft_tolerance",
+    "residual_ok",
+    "with_checks",
+    "params_ok",
+    "kv_tree_sums",
+    "kv_row_delta",
+    "kv_sums_ok",
+    "kv_slot_reset",
+    "kv_check",
+    "kv_roll",
+]
+
+ABFT_ENV = "REPRO_ABFT"
+
+
+def abft_enabled() -> bool:
+    return os.environ.get(ABFT_ENV, "").lower() in ("1", "true", "on")
+
+
+# ------------------------------------------------------------ GEMM residual
+def abft_tolerance(n: int, d: int) -> Tuple[float, float]:
+    """(rtol, atol) for the quant_dot checksum residual at contraction
+    width n and out-channel width d. rtol scales the row's absolute
+    output mass; atol only breaks ties for exactly-zero rows.
+
+    The constant 4.0 is calibrated, not worst-case: across 3 modes x 3
+    io dtypes x 3 shapes x 3 schedules the measured healthy residual
+    never exceeds 0.008 * eps * sqrt(n + d) relative to the row mass
+    (the int8 path accumulates exactly in int32 and the fp8 grids embed
+    exactly in bf16, so only the f32 scale-multiply + row-sum chains
+    disagree between the residual's two sides) -- 4.0 is ~500x that.
+    Keeping it tight is what buys detection: a single LSB flip of one
+    int8 weight element shifts an affected row's residual by
+    |q_act| * scale -- typically >10x this threshold even at delta=1."""
+    eps = float(jnp.finfo(jnp.float32).eps)
+    return 4.0 * eps * math.sqrt(n + d), 1e-20
+
+
+def residual_ok(y: jnp.ndarray, resid: jnp.ndarray, *,
+                n: int, d: int) -> jnp.ndarray:
+    """Per-row verdict: y (..., d) kernel output, resid (..., 1) f32
+    checksum residual -> bool (..., 1), True = row verified."""
+    rtol, atol = abft_tolerance(n, d)
+    scale = jnp.sum(jnp.abs(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    return jnp.abs(resid) <= rtol * scale + atol
+
+
+# ------------------------------------------------------------ weight checks
+def with_checks(params):
+    """Attach the ABFT column checksum to every QTensor leaf that lacks
+    one (leaves that already carry a check are kept verbatim). Pure
+    tree_map -- jit it once at engine init."""
+    def fix(t):
+        if wquant.is_qleaf(t) and t.check is None:
+            return dataclasses.replace(
+                t, check=wquant.weight_checksum(t.q, t.scale))
+        return t
+
+    return jax.tree.map(fix, params, is_leaf=wquant.is_qleaf)
+
+
+def params_ok(params, *, rtol: float = 1e-5) -> bool:
+    """On-demand host diagnostic: recompute every stored checksum from
+    the LIVE weight (same op order as ``wquant.weight_checksum``) and
+    compare. False means the weights themselves are corrupt -- the
+    engine uses this to attribute a logits-level trip to silent weight
+    corruption vs. a transient numeric event. Zero steady-state cost:
+    only called after a trip."""
+    oks = []
+
+    def one(t):
+        if wquant.is_qleaf(t) and t.check is not None:
+            rec = wquant.weight_checksum(t.q, t.scale)
+            bound = rtol * jnp.max(jnp.abs(t.check)) + 1e-12
+            oks.append(jnp.max(jnp.abs(rec - t.check)) <= bound)
+        return t
+
+    jax.tree.map(one, params, is_leaf=wquant.is_qleaf)
+    if not oks:
+        return True
+    return bool(np.all(np.asarray(jax.device_get(oks))))
+
+
+# ---------------------------------------------------------- KV conservation
+def _leaf_sums(leaf, keep) -> jnp.ndarray:
+    """[sum, abs_sum] per slot of a (repeats, slots, T, KH, hd) cache
+    leaf under a (slots, T) bool row mask, f32 -> (slots, 2)."""
+    m = keep[None, :, :, None, None]
+    v = jnp.where(m, leaf.astype(jnp.float32), 0.0)
+    s = jnp.sum(v, axis=(0, 2, 3, 4))
+    a = jnp.sum(jnp.abs(v), axis=(0, 2, 3, 4))
+    return jnp.stack([s, a], axis=-1)
+
+
+def kv_tree_sums(caches, pos: jnp.ndarray) -> jnp.ndarray:
+    """Per-slot [sum, abs_sum] over the valid rows [0, pos[slot]) of
+    every cache leaf -> (slots, 2) f32. Rows at/after pos (prefill
+    padding, retired-slot leftovers) are masked with ``where`` so stale
+    garbage -- even non-finite garbage -- cannot leak into the sums."""
+    pos = pos.astype(jnp.int32)
+    total = None
+    for leaf in jax.tree.leaves(caches):
+        t = leaf.shape[2]
+        keep = jnp.arange(t, dtype=jnp.int32)[None, :] < pos[:, None]
+        cur = _leaf_sums(leaf, keep)
+        total = cur if total is None else total + cur
+    return total
+
+
+def kv_row_delta(caches, pos: jnp.ndarray) -> jnp.ndarray:
+    """Per-slot [sum, abs_sum] of the single row at index pos[slot] of
+    every cache leaf -> (slots, 2) f32. This is the row the decode step
+    just wrote; adding it to the pre-step sums rolls the conservation
+    state forward without a second full reduction."""
+    pos = pos.astype(jnp.int32)
+    total = None
+    for leaf in jax.tree.leaves(caches):
+        t = leaf.shape[2]
+        idx = jnp.clip(pos, 0, t - 1)[None, :, None, None, None]
+        idx = jnp.broadcast_to(idx, leaf.shape[:2] + (1,) + leaf.shape[3:])
+        row = jnp.take_along_axis(leaf, idx, axis=2).astype(jnp.float32)
+        s = jnp.sum(row, axis=(0, 2, 3, 4))
+        a = jnp.sum(jnp.abs(row), axis=(0, 2, 3, 4))
+        cur = jnp.stack([s, a], axis=-1)
+        total = cur if total is None else total + cur
+    return total
+
+
+def kv_sums_ok(cur: jnp.ndarray, expected: jnp.ndarray, *,
+               rtol: float = 1e-4, atol: float = 1e-3) -> jnp.ndarray:
+    """Per-slot verdict (slots,) bool: does the recomputed conservation
+    state match the carried one? Trips ONLY on finite mismatches --
+    NaN/Inf deltas are left to the logits guard channel so the engine
+    can tell silent corruption from numeric blow-up. rtol covers the
+    reduction-order nondeterminism between the fused recompute and the
+    sum+delta rollforward."""
+    mass = jnp.maximum(cur[:, 1], expected[:, 1])
+    bad = None
+    for c in (0, 1):
+        diff = cur[:, c] - expected[:, c]
+        b = jnp.isfinite(diff) & (jnp.abs(diff) > rtol * mass + atol)
+        bad = b if bad is None else bad | b
+    return ~bad
+
+
+def kv_check(caches, pos: jnp.ndarray,
+             kv_sums: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pre-decode integrity gate: recompute the conservation state from
+    the caches the step is about to consume and compare it against the
+    carried one. Returns (ok (slots,) bool, cur (slots, 2) f32); ``cur``
+    feeds :func:`kv_roll` after the step so the full reduction runs once.
+
+    Deliberately a SEPARATE executable from the decode step: the decode
+    donates its cache operands for in-place reuse, and folding a
+    whole-cache read into that same program forces XLA to defensively
+    copy the donated buffers (and materializes cache-shaped f32
+    intermediates inside the serving hot path) -- both outlawed by the
+    serving lint contracts. Dispatched back-to-back from the engine, the
+    read completes before the donated step consumes the buffers."""
+    cur = kv_tree_sums(caches, pos)
+    return kv_sums_ok(cur, kv_sums), cur
+
+
+def kv_roll(caches, pos: jnp.ndarray, cur: jnp.ndarray) -> jnp.ndarray:
+    """Post-decode rollforward: the step wrote exactly one new KV row
+    per slot (at the PRE-step ``pos``); fold it into the recomputed
+    pre-step sums to get the state the next step must reproduce."""
+    return cur + kv_row_delta(caches, pos)
+
+
+def kv_slot_reset(kv_sums: jnp.ndarray, caches, slot: jnp.ndarray,
+                  upto: jnp.ndarray) -> jnp.ndarray:
+    """Rebase one slot's conservation state from the cache itself over
+    rows [0, upto) -- called after prefill-insert, which rewrites the
+    slot's block wholesale. Prefill PADDING rows (>= the real prompt
+    length) stay excluded: they hold garbage the causal mask never
+    attends."""
+    slots = kv_sums.shape[0]
+    pos = jnp.where(jnp.arange(slots, dtype=jnp.int32) == slot,
+                    jnp.asarray(upto, jnp.int32), 0)
+    fresh = kv_tree_sums(caches, pos)
+    return kv_sums.at[slot].set(fresh[slot])

@@ -1,0 +1,372 @@
+"""ABFT runtime verification (PR 10, DESIGN.md section 14).
+
+The checksum-verified kernels must be invisible when healthy -- bitwise
+identical outputs, zero trips across modes x dtypes x schedules (the
+false-positive property the calibrated tolerances buy) -- and loud when
+corrupted: a flipped weight element, a clobbered column, or a poisoned
+expert shifts the per-row residual by orders of magnitude over the
+threshold, and ONLY the affected rows trip. The KV conservation law,
+the pure-rotation linearity check, the stored-checksum weight audit,
+and the checkpoint CRC seam get the same healthy/corrupt treatment.
+"""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro import verify
+from repro.core.api import (
+    QuantDotSpec,
+    QuantEpilogue,
+    RotationSpec,
+    plan_for,
+)
+from repro.core.hadamard import hadamard_check, hadamard_transform
+from repro.core.wquant import QTensor, quantize_weight, weight_checksum
+from repro.kernels.quant_dot import (
+    pallas_quant_dot,
+    pallas_quant_dot_experts,
+    xla_quant_dot_resid,
+)
+from repro.kernels.registry import TRACE_COUNTS
+
+MODES = ("int8", "fp8_e4m3", "fp8_e5m2")
+DTYPES = (jnp.float32, jnp.bfloat16, jnp.float16)
+SCHEDULES = ("rotate_once", "streamed")
+
+
+def _x(shape, seed=0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+def _qw(n, d, mode, seed=1, scale=0.05):
+    w = _x((n, d), seed=seed) * scale
+    return quantize_weight(w, mode, with_check=True)
+
+
+def _stream_env(monkeypatch, schedule):
+    if schedule == "streamed":
+        # run the real streamed kernel body on the interpreter's
+        # synchronous DMA simulation instead of falling back
+        monkeypatch.setenv("REPRO_QUANT_DOT_STREAM_INTERPRET", "1")
+
+
+# ------------------------------------------------------------- checksum math
+def test_weight_checksum_shape_and_identity():
+    qt = _qw(256, 96, "int8")
+    assert qt.check is not None and qt.check.shape == (1, 256)
+    assert qt.check.dtype == jnp.float32
+    # sum_d (a . W_dq)[d] == a . check for any activation row a
+    a = _x((3, 256), seed=7)
+    lhs = (a @ qt.dequant(jnp.float32)).sum(axis=-1)
+    rhs = a @ qt.check.reshape(256)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=1e-4, atol=1e-4)
+    # default quantization carries no checksum (empty pytree subtree)
+    assert quantize_weight(_x((256, 96)) * 0.05, "int8").check is None
+
+
+def test_with_checks_attaches_and_params_ok_audits():
+    tree = {"w_down": quantize_weight(_x((128, 64), seed=2) * 0.1, "int8"),
+            "bias": jnp.zeros((4,))}
+    tree = verify.with_checks(tree)
+    assert tree["w_down"].check is not None
+    assert verify.params_ok(tree)
+    # silent corruption of the live weight breaks the stored checksum
+    bad = dataclasses.replace(
+        tree["w_down"], q=tree["w_down"].q.at[3, 5].set(127))
+    assert not verify.params_ok({"w_down": bad, "bias": tree["bias"]})
+
+
+# ----------------------------------------- healthy runs: bitwise, zero trips
+@pytest.mark.parametrize("schedule", SCHEDULES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("mode", MODES)
+def test_healthy_verified_kernel_bitwise_and_all_ok(mode, dtype, schedule,
+                                                    monkeypatch):
+    _stream_env(monkeypatch, schedule)
+    n, d, m = 256, 256, 9
+    x = _x((m, n), seed=n, dtype=dtype)
+    qt = _qw(n, d, mode, seed=n + 1)
+    plan = plan_for(n, dtype=dtype, backend="pallas",
+                    epilogue=QuantEpilogue(mode))
+    y = pallas_quant_dot(x, qt.q, qt.scale, plan, True, schedule)
+    yv, resid = pallas_quant_dot(x, qt.q, qt.scale, plan, True, schedule,
+                                 check=qt.check)
+    # the verified kernel's real output is graph-identical -> bitwise
+    assert (np.asarray(y, np.float32) == np.asarray(yv, np.float32)).all()
+    assert resid.shape == (m, 1) and resid.dtype == jnp.float32
+    ok = verify.residual_ok(yv, resid, n=n, d=d)
+    assert bool(ok.all()), np.asarray(resid)[~np.asarray(ok)[:, 0]]
+
+
+def test_healthy_padded_tail_all_ok(monkeypatch):
+    # d = 600 with block_n=128 pads 40 out-channels; the zero pad columns
+    # must contribute nothing to either residual side
+    n, d, m = 256, 600, 5
+    x = _x((m, n), seed=3)
+    qt = _qw(n, d, "int8", seed=4)
+    plan = plan_for(n, dtype=jnp.float32, backend="pallas",
+                    epilogue=QuantEpilogue("int8"))
+    y = pallas_quant_dot(x, qt.q, qt.scale, plan, True, "rotate_once", 128)
+    yv, resid = pallas_quant_dot(x, qt.q, qt.scale, plan, True,
+                                 "rotate_once", 128, check=qt.check)
+    assert (np.asarray(y) == np.asarray(yv)).all()
+    assert bool(verify.residual_ok(yv, resid, n=n, d=d).all())
+
+
+@settings(deadline=None, max_examples=6)
+@given(logn=st.integers(5, 8), seed=st.integers(0, 2**31 - 1),
+       mode=st.sampled_from(MODES))
+def test_property_healthy_never_trips(logn, seed, mode):
+    """False-positive property: no healthy (shape, seed, mode) trips the
+    calibrated tolerance -- the ~500x headroom in abft_tolerance."""
+    n = 2 ** logn
+    x = _x((6, n), seed=seed)
+    qt = _qw(n, 96, mode, seed=seed + 1)
+    plan = plan_for(n, dtype=jnp.float32, backend="pallas",
+                    epilogue=QuantEpilogue(mode))
+    yv, resid = pallas_quant_dot(x, qt.q, qt.scale, plan, True,
+                                 "rotate_once", check=qt.check)
+    assert bool(verify.residual_ok(yv, resid, n=n, d=96).all())
+
+
+# --------------------------------------------------- detection: iff affected
+def test_corrupt_weight_column_trips_only_affected_rows():
+    n, d, m = 256, 128, 6
+    x = _x((m, n), seed=11)
+    x = x.at[2].set(0.0)            # a zero activation row is unaffected
+    qt = _qw(n, d, "int8", seed=12)
+    bad_q = qt.q.at[:, 0].set(127)  # clobber one out-channel column
+    plan = plan_for(n, dtype=jnp.float32, backend="pallas",
+                    epilogue=QuantEpilogue("int8"))
+    yv, resid = pallas_quant_dot(x, bad_q, qt.scale, plan, True,
+                                 "rotate_once", check=qt.check)
+    ok = np.asarray(verify.residual_ok(yv, resid, n=n, d=d))[:, 0]
+    assert not ok[[0, 1, 3, 4, 5]].any(), np.asarray(resid)
+    assert ok[2]                    # zero row: residual exactly zero
+
+
+def test_single_lsb_flip_is_detected():
+    """Detection sensitivity: ONE least-significant-bit flip of one int8
+    weight element shifts affected rows' residuals past the threshold."""
+    n, d = 256, 128
+    x = _x((8, n), seed=21)
+    qt = _qw(n, d, "int8", seed=22)
+    bad_q = qt.q.at[17, 40].add(1)
+    plan = plan_for(n, dtype=jnp.float32, backend="pallas",
+                    epilogue=QuantEpilogue("int8"))
+    yv, resid = pallas_quant_dot(x, bad_q, qt.scale, plan, True,
+                                 "rotate_once", check=qt.check)
+    ok = np.asarray(verify.residual_ok(yv, resid, n=n, d=d))
+    assert not ok.all(), "LSB flip went undetected"
+
+
+def test_experts_healthy_bitwise_and_surgical_detection():
+    n, d, m = 256, 128, 4
+    xe = _x((1, 2, m, n), seed=31)
+    we = _x((2, n, d), seed=32) * 0.05
+    qt = quantize_weight(we, "int8", with_check=True)
+    assert qt.check.shape == (2, 1, n)
+    plan = plan_for(n, dtype=jnp.float32, backend="pallas",
+                    epilogue=QuantEpilogue("int8"))
+    y = pallas_quant_dot_experts(xe, qt.q, qt.scale, plan, True)
+    yv, resid = pallas_quant_dot_experts(xe, qt.q, qt.scale, plan, True,
+                                         check=qt.check)
+    assert (np.asarray(y) == np.asarray(yv)).all()
+    ok = verify.residual_ok(yv, resid, n=n, d=d)
+    assert bool(ok.all())
+    # poison expert 0's weights: ONLY expert 0's rows trip
+    bad_q = qt.q.at[0, :, 0].set(127)
+    yb, rb = pallas_quant_dot_experts(xe, bad_q, qt.scale, plan, True,
+                                      check=qt.check)
+    okb = np.asarray(verify.residual_ok(yb, rb, n=n, d=d))[0, :, :, 0]
+    assert not okb[0].any() and okb[1].all(), okb
+
+
+# ------------------------------------------------------------ XLA residual
+def test_xla_resid_exactly_zero_when_healthy():
+    """The unfused oracle recomputes the checksum from the live weight
+    with the identical op order -> the healthy residual is EXACTLY zero
+    (not merely small), including on grouped (non-pow2) plans."""
+    for n in (256, 384):            # pow2 and 3*128 grouped
+        x = _x((5, n), seed=n)
+        qt = _qw(n, 96, "fp8_e4m3", seed=n + 1)
+        plan = plan_for(n, dtype=jnp.float32, backend="xla",
+                        epilogue=QuantEpilogue("fp8_e4m3"))
+        resid = xla_quant_dot_resid(x, qt.q, qt.scale, qt.check, plan, True)
+        assert resid.shape == (5, 1)
+        assert (np.asarray(resid) == 0.0).all(), (n, np.asarray(resid))
+        # a corrupted STORED checksum (stale metadata) is caught too
+        bad = xla_quant_dot_resid(x, qt.q, qt.scale, qt.check + 1.0,
+                                  plan, True)
+        assert (np.asarray(bad) != 0.0).all()
+
+
+# -------------------------------------------------------- rotation linearity
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_hadamard_check_healthy_and_corrupt(dtype):
+    x = _x((16, 128), seed=41, dtype=dtype)
+    y = hadamard_transform(x)
+    assert bool(hadamard_check(x, y))
+    # one corrupted output element shifts one column sum
+    bad = y.at[3, 7].add(jnp.asarray(1.0, dtype))
+    assert not bool(hadamard_check(x, bad))
+    # non-finite outputs fail (NaN compares unordered)
+    assert not bool(hadamard_check(x, y.at[0, 0].set(jnp.nan)))
+
+
+def test_rotation_spec_abft_bitwise_and_traced():
+    x = _x((8, 128), seed=51)
+    plain = RotationSpec(n=128, mode="none")(x)
+    before = TRACE_COUNTS[("abft", "rotation_site")]
+    checked = RotationSpec(n=128, mode="none", abft=True)(x)
+    assert TRACE_COUNTS[("abft", "rotation_site")] > before
+    assert (np.asarray(plain) == np.asarray(checked)).all()
+    assert np.isfinite(np.asarray(checked)).all()
+
+
+# ------------------------------------------------------- spec-level poisoning
+def test_quant_dot_spec_abft_healthy_bitwise_corrupt_nan(monkeypatch):
+    # pin the runtime switch OFF: this test exercises the spec-level
+    # abft field in isolation (the CI ABFT chaos leg exports
+    # REPRO_ABFT=1 globally, which would legitimately verify the
+    # "inert" binding below)
+    monkeypatch.delenv(verify.ABFT_ENV, raising=False)
+    n, d = 256, 128
+    x = _x((7, n), seed=61)
+    qt = _qw(n, d, "int8", seed=62)
+    spec = QuantDotSpec(n=n, mode="int8")
+    y = spec.bind(qt)(x)
+    yv = dataclasses.replace(spec, abft=True).bind(qt)(x)
+    # healthy: the NaN-poison select is exact -> bitwise identical
+    assert (np.asarray(y) == np.asarray(yv)).all()
+    # corrupt: every affected row surfaces as NaN, nothing else changes
+    bad = dataclasses.replace(qt, q=qt.q.at[:, 0].set(127))
+    yb = np.asarray(dataclasses.replace(spec, abft=True).bind(bad)(x),
+                    np.float32)
+    assert np.isnan(yb).any()
+    # checksums alone are inert: abft=False ignores the stored check
+    yoff = spec.bind(bad)(x)
+    assert np.isfinite(np.asarray(yoff, np.float32)).all()
+
+
+# --------------------------------------------------------- KV conservation
+def _toy_caches(seed=71, slots=3, t=8):
+    rng = np.random.default_rng(seed)
+    mk = lambda s: jnp.asarray(
+        rng.standard_normal((1, slots, t, 2, 4)), jnp.float32)
+    return [mk(0), mk(1)]
+
+
+def test_kv_check_roundtrip_and_roll():
+    caches = _toy_caches()
+    pos = jnp.asarray([3, 5, 0], jnp.int32)
+    sums = verify.kv_tree_sums(caches, pos)
+    ok, cur = verify.kv_check(caches, pos, sums)
+    assert bool(ok.all()) and (np.asarray(cur) == np.asarray(sums)).all()
+    # a decode step writes row pos[slot]; the rollforward must equal a
+    # full recompute at pos+1
+    new = [c.at[:, :, 4].add(1.0) for c in caches]  # row 4 rewritten
+    pos2 = jnp.asarray([4, 4, 4], jnp.int32)
+    rolled = verify.kv_roll(new, pos2, verify.kv_tree_sums(new, pos2))
+    full = verify.kv_tree_sums(new, pos2 + 1)
+    np.testing.assert_allclose(np.asarray(rolled), np.asarray(full),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_kv_finite_corruption_trips_only_that_slot():
+    caches = _toy_caches()
+    pos = jnp.asarray([3, 5, 2], jnp.int32)
+    sums = verify.kv_tree_sums(caches, pos)
+    bad = [caches[0].at[0, 1, 2, 0, 0].add(448.0), caches[1]]
+    ok, _ = verify.kv_check(bad, pos, sums)
+    assert not bool(ok[1]) and bool(ok[0]) and bool(ok[2])
+
+
+def test_kv_nan_routes_to_guard_channel_not_abft():
+    """NaN in a valid row announces itself at the logits guard; the KV
+    conservation verdict deliberately stays True so the engine can
+    attribute the trip (silent corruption vs numeric blow-up)."""
+    caches = _toy_caches()
+    pos = jnp.asarray([3, 5, 2], jnp.int32)
+    sums = verify.kv_tree_sums(caches, pos)
+    bad = [caches[0].at[0, 0, 1, 0, 0].set(jnp.nan), caches[1]]
+    ok, _ = verify.kv_check(bad, pos, sums)
+    assert bool(ok[0])
+
+
+def test_kv_stale_rows_are_masked():
+    # garbage (even NaN) at/after pos is invisible: warmup scribbles and
+    # retired-slot leftovers cannot trip the law
+    caches = _toy_caches()
+    pos = jnp.asarray([3, 5, 2], jnp.int32)
+    sums = verify.kv_tree_sums(caches, pos)
+    bad = [caches[0].at[0, 0, 6].set(jnp.nan), caches[1].at[0, 2, 7].set(1e9)]
+    ok, _ = verify.kv_check(bad, pos, sums)
+    assert bool(ok.all())
+
+
+def test_kv_slot_reset_rebases_one_slot():
+    caches = _toy_caches()
+    pos = jnp.asarray([3, 5, 2], jnp.int32)
+    sums = verify.kv_tree_sums(caches, pos)
+    stale = sums.at[1].add(99.0)    # slot 1 drifted (e.g. retired mid-trip)
+    fixed = verify.kv_slot_reset(stale, caches, jnp.asarray(1, jnp.int32),
+                                 jnp.asarray(5, jnp.int32))
+    np.testing.assert_allclose(np.asarray(fixed), np.asarray(sums),
+                               rtol=1e-6)
+    ok, _ = verify.kv_check(caches, pos, fixed)
+    assert bool(ok.all())
+
+
+# ------------------------------------------------------------ checkpoint CRC
+def test_checkpoint_crc_roundtrip_and_corruption(tmp_path):
+    from repro.checkpoint.store import restore_checkpoint, save_checkpoint
+
+    tree = {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.bfloat16)}}
+    save_checkpoint(str(tmp_path), 3, tree, async_write=False)
+    back = restore_checkpoint(str(tmp_path), 3, tree)
+    assert (np.asarray(back["a"]) == np.asarray(tree["a"])).all()
+
+    # flip one payload byte on disk: restore must refuse, naming the leaf
+    arr0 = os.path.join(str(tmp_path), "step_000000003", "arr_0.npy")
+    raw = bytearray(open(arr0, "rb").read())
+    raw[-1] ^= 0xFF
+    open(arr0, "wb").write(bytes(raw))
+    with pytest.raises(ValueError, match="CORRUPT.*CRC-32"):
+        restore_checkpoint(str(tmp_path), 3, tree)
+
+    # pre-PR 10 manifests (no crc entries) still restore unchecked
+    man = os.path.join(str(tmp_path), "step_000000003", "tree.json")
+    m = json.load(open(man))
+    for leaf in m["leaves"]:
+        leaf.pop("crc", None)
+    json.dump(m, open(man, "w"))
+    restore_checkpoint(str(tmp_path), 3, tree)
+
+
+# ------------------------------------------------------------------- linting
+def test_abft_kernel_sites_lint_green():
+    """The verification column must not break the fusion / rotate-once /
+    DMA contracts -- the lint runs the same rules over the verified
+    twins that gate the unverified kernels."""
+    from repro.analysis.rules import run_rules
+    from repro.analysis.sites import kernel_sites
+
+    report = run_rules(kernel_sites("llama3_8b", "rotate_once", abft=True))
+    assert report.ok, report.format_text()
+
+
+def test_abft_tolerance_scaling():
+    r1, a1 = verify.abft_tolerance(256, 128)
+    r2, a2 = verify.abft_tolerance(1024, 512)
+    assert 0 < r1 < r2 < 1e-4 and a1 == a2 > 0
